@@ -1,0 +1,39 @@
+"""Paper Table 6: construction + query cost as k varies (fixed k around
+the sigma-chosen one)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import graphs_for_scale, row
+from repro.core import ISLabelIndex, IndexConfig
+
+
+def main(full: bool = False):
+    name, (n, src, dst, w) = graphs_for_scale(full)[0]
+    base = ISLabelIndex.build(n, src, dst, w, IndexConfig(l_cap=1024,
+                                                          label_chunk=2048))
+    k_auto = base.stats.k
+    for k in sorted({max(2, k_auto - 1), k_auto, k_auto + 1}):
+        cfg = IndexConfig(k_force=k, l_cap=2048, label_chunk=2048)
+        t0 = time.perf_counter()
+        idx = ISLabelIndex.build(n, src, dst, w, cfg)
+        build = time.perf_counter() - t0
+        r = np.random.default_rng(0)
+        s = r.integers(0, n, 1000).astype(np.int32)
+        t = r.integers(0, n, 1000).astype(np.int32)
+        jax.block_until_ready(idx.query(s, t))
+        t0 = time.perf_counter()
+        jax.block_until_ready(idx.query(s, t))
+        q = time.perf_counter() - t0
+        st = idx.stats
+        row("table6_k_sweep", f"{name}/k={k}", q / 1000 * 1e6,
+            V_Gk=st.n_core, E_Gk=st.m_core // 2,
+            label_entries=st.label_entries, build_s=round(build, 2),
+            query_ms_per_1k=round(q * 1e3, 2), auto_k=k_auto)
+
+
+if __name__ == "__main__":
+    main()

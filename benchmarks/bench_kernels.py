@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: the jnp reference paths (the CPU-measurable
+proxies) at serving shapes + interpret-mode parity checks. On TPU the
+pallas_call paths replace the refs; CPU timings here track the *jnp*
+implementations the engine actually runs on this container."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.query import label_intersect_mu
+from repro.kernels.label_intersect.ref import label_intersect_ref
+from repro.kernels.minplus_matmul.ref import minplus_matmul_ref
+from repro.kernels.spmv_relax.ops import coo_to_ell
+from repro.kernels.spmv_relax.ref import spmv_relax_ref
+
+
+def main(full: bool = False):
+    r = np.random.default_rng(0)
+    # label intersection at serving shape
+    q, l, n = (4096, 64, 1 << 20) if full else (512, 64, 1 << 16)
+    ids_s = np.sort(r.integers(0, n, (q, l)).astype(np.int32), 1)
+    ids_t = np.sort(r.integers(0, n, (q, l)).astype(np.int32), 1)
+    d_s = r.random((q, l)).astype(np.float32)
+    d_t = r.random((q, l)).astype(np.float32)
+    f = jax.jit(lambda a, b, c, d: label_intersect_mu(a, b, c, d, n, l))
+    us, _ = timeit(f, jnp.asarray(ids_s), jnp.asarray(d_s),
+                   jnp.asarray(ids_t), jnp.asarray(d_t))
+    row("kernels", f"label_intersect_engine[{q}x{l}]", us / q * 1e6,
+        total_ms=round(us * 1e3, 3))
+    g = jax.jit(lambda a, b, c, d: label_intersect_ref(a, b, c, d, n))
+    us2, _ = timeit(g, jnp.asarray(ids_s), jnp.asarray(d_s),
+                    jnp.asarray(ids_t), jnp.asarray(d_t))
+    row("kernels", f"label_intersect_ref[{q}x{l}]", us2 / q * 1e6)
+
+    # minplus matmul (core-search building block)
+    m = 512 if full else 256
+    a = (r.random((m, m)) * 9).astype(np.float32)
+    b = (r.random((m, m)) * 9).astype(np.float32)
+    f = jax.jit(minplus_matmul_ref)
+    us, _ = timeit(f, jnp.asarray(a), jnp.asarray(b))
+    row("kernels", f"minplus_ref[{m}^3]", us * 1e6,
+        gflops=round(2 * m ** 3 / us / 1e9, 2))
+
+    # relaxation round at core-graph shape
+    v, e, qb = (1 << 15, 1 << 18, 256) if full else (1 << 12, 1 << 15, 64)
+    src = r.integers(0, v, e)
+    dst = r.integers(0, v, e)
+    w = r.integers(1, 5, e).astype(np.float32)
+    ids, ws = coo_to_ell(v, src, dst, w, d_width=16)
+    dist = np.full((qb, v), np.inf, np.float32)
+    dist[np.arange(qb), r.integers(0, v, qb)] = 0.0
+    f = jax.jit(spmv_relax_ref)
+    us, _ = timeit(f, jnp.asarray(dist), ids, ws)
+    row("kernels", f"spmv_relax_ref[q{qb},v{v}]", us * 1e6,
+        edges_per_s=round(qb * e / us / 1e6, 1))
+
+
+if __name__ == "__main__":
+    main()

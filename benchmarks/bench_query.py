@@ -1,0 +1,63 @@
+"""Paper Tables 4 + 5: query time over 1000 random queries, split into
+Time(a) label fetch+intersection vs Time(b) core search, and broken down
+by endpoint type (1: both core, 2: one core, 3: neither)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import graphs_for_scale, row
+from repro.core import ISLabelIndex, IndexConfig
+from repro.core.query import label_intersect_mu
+
+
+def main(full: bool = False):
+    n_q = 1000
+    for name, (n, src, dst, w) in graphs_for_scale(full):
+        idx = ISLabelIndex.build(n, src, dst, w,
+                                 IndexConfig(l_cap=1024, label_chunk=2048))
+        r = np.random.default_rng(0)
+        s = r.integers(0, n, n_q).astype(np.int32)
+        t = r.integers(0, n, n_q).astype(np.int32)
+
+        # warmup (compile)
+        jax.block_until_ready(idx.query(s, t))
+
+        # Time (a): label gather + intersection only
+        sj, tj = jnp.asarray(s), jnp.asarray(t)
+        t0 = time.perf_counter()
+        mu = idx.engine.query_mu_only(sj, tj)
+        jax.block_until_ready(mu)
+        ta = time.perf_counter() - t0
+
+        # total
+        t0 = time.perf_counter()
+        ans = idx.query(sj, tj)
+        jax.block_until_ready(ans)
+        tot = time.perf_counter() - t0
+        tb = max(tot - ta, 0.0)
+        row("table4_query", name, tot / n_q * 1e6,
+            total_ms_per_1k=round(tot * 1e3, 2),
+            time_a_ms=round(ta * 1e3, 2), time_b_ms=round(tb * 1e3, 2),
+            relax_rounds=idx.engine._last_rounds)
+
+        # Table 5: by endpoint type
+        types = idx.query_types(s, t)
+        for ty in (1, 2, 3):
+            m = types == ty
+            if m.sum() == 0:
+                continue
+            sq, tq = jnp.asarray(s[m]), jnp.asarray(t[m])
+            jax.block_until_ready(idx.query(sq, tq))
+            t0 = time.perf_counter()
+            jax.block_until_ready(idx.query(sq, tq))
+            dt = time.perf_counter() - t0
+            row("table5_by_type", f"{name}/type{ty}",
+                dt / max(int(m.sum()), 1) * 1e6, n_queries=int(m.sum()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities. Every table prints CSV rows:
+``table,name,us_per_call,derived...``"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args)) if _is_jax(fn, args) else fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def _is_jax(fn, args):
+    return True
+
+
+def row(table, name, us, **derived):
+    extra = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{table},{name},{us:.1f},{extra}")
+
+
+def graphs_for_scale(full: bool):
+    """Benchmark graph suite: (name, (n, src, dst, w)). Mirrors the
+    paper's dataset regimes (Table 2) at container scale."""
+    from repro.graphs import generators as gen
+    if full:
+        specs = [("rmat17-web", lambda: gen.rmat_graph(17, 8.0, seed=1)),
+                 ("rmat15", lambda: gen.rmat_graph(15, 8.0, seed=1)),
+                 ("er16-btc", lambda: gen.er_graph(1 << 16, 2.2, seed=2)),
+                 ("grid181-road", lambda: gen.grid_graph(181, seed=3))]
+    else:
+        specs = [("rmat12-web", lambda: gen.rmat_graph(12, 8.0, seed=1)),
+                 ("er12-btc", lambda: gen.er_graph(1 << 12, 2.2, seed=2)),
+                 ("grid64-road", lambda: gen.grid_graph(64, seed=3))]
+    return [(name, mk()) for name, mk in specs]

@@ -1,0 +1,129 @@
+"""Roofline report (deliverable g): reads experiments/dryrun/*.json and
+emits the per-(arch x shape x mesh) table with the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS utilization, and
+HBM-fit verdicts. v5e model: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+HBM_PER_CHIP = 16e9
+
+
+def model_flops(arch: str, shape: str) -> float | None:
+    """Useful-work FLOPs: 6·N·D train (N_active for MoE), 2·N_active per
+    decoded/prefilled token."""
+    from repro.configs import registry
+    spec = registry.get_spec(arch)
+    if spec.family == "lm":
+        cfg = spec.model_cfg
+        shp = spec.shape(shape)
+        tokens = shp.global_batch * shp.seq_len
+        n_act = cfg.active_param_count()
+        if shp.kind == "train":
+            return 6.0 * n_act * tokens
+        if shp.kind == "prefill":
+            return 2.0 * n_act * tokens
+        return 2.0 * n_act * shp.global_batch        # decode: 1 token/seq
+    if spec.family == "recsys":
+        shp = spec.shape(shape)
+        cfg = spec.model_cfg
+        per_ex = (cfg.seq_len * 2 * 3 * (cfg.d_behavior + cfg.gru_dim)
+                  * cfg.gru_dim * 2        # two GRUs
+                  + 2 * (cfg.gru_dim + 2 * cfg.d_behavior + 18) * 200
+                  + 2 * 200 * 80)
+        mult = 3.0 if shp.kind == "train" else 1.0
+        if shp.kind == "retrieval":
+            return 2.0 * shp.n_candidates * cfg.embed_dim
+        return mult * per_ex * shp.batch
+    if spec.family == "gnn":
+        shp = spec.shape(shape)
+        cfg = spec.model_cfg
+        e = 2 * shp.n_edges if shp.kind != "molecule" else \
+            2 * shp.batch_graphs * shp.n_edges
+        nn = shp.n_nodes if shp.kind != "molecule" else \
+            shp.batch_graphs * shp.n_nodes
+        h = getattr(cfg, "d_hidden", 64)
+        nl = getattr(cfg, "n_layers", getattr(cfg, "n_blocks", 2))
+        # train fwd+bwd ~ 3x(SpMM gather+dense)
+        return 3.0 * nl * (2.0 * e * h + 2.0 * nn * h * h)
+    return None
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(f"{out_dir}/*.json")):
+        recs.append(json.loads(Path(f).read_text()))
+    return recs
+
+
+def report(out_dir="experiments/dryrun", csv=True):
+    rows = []
+    for r in load(out_dir):
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "ok": False,
+                         "error": r.get("error", "?")[:80]})
+            continue
+        dev = r["devices"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = r["flops_per_device"] * dev
+        mem = r.get("mem") or {}
+        hbm_need = (mem.get("argument_size_in_bytes") or 0) + \
+            (mem.get("temp_size_in_bytes") or 0)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "ok": True,
+            "t_compute_s": r["t_compute_s"],
+            "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "dominant": r["dominant"],
+            "model_flops": mf,
+            "useful_ratio": (mf / hlo_total) if mf and hlo_total else None,
+            "bytes_per_device": hbm_need,
+            "fits_hbm": hbm_need <= HBM_PER_CHIP if mem else None,
+            "roofline_frac": None,
+        })
+    # roofline fraction: useful-compute time / dominant-term time
+    for row_ in rows:
+        if row_.get("ok") and row_.get("model_flops"):
+            t_useful = row_["model_flops"] / (197e12 *
+                                              _dev(row_["mesh"]))
+            t_bound = max(row_["t_compute_s"], row_["t_memory_s"],
+                          row_["t_collective_s"])
+            row_["roofline_frac"] = t_useful / t_bound if t_bound else None
+    if csv:
+        hdr = ["arch", "shape", "mesh", "dominant", "t_compute_s",
+               "t_memory_s", "t_collective_s", "useful_ratio",
+               "roofline_frac", "fits_hbm"]
+        print(",".join(hdr))
+        for row_ in rows:
+            if not row_.get("ok"):
+                print(f"{row_['arch']},{row_['shape']},{row_['mesh']},"
+                      f"FAIL,,,,,,{row_.get('error')}")
+                continue
+            print(",".join(_fmt(row_.get(h)) for h in hdr))
+    return rows
+
+
+def _dev(mesh: str) -> int:
+    out = 1
+    for p in mesh.split("x"):
+        out *= int(p)
+    return out
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def main(full: bool = False):
+    report()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table. Prints
+``table,name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only tableX]
+"""
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale graphs (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_baselines, bench_construction,
+                            bench_k_sweep, bench_kernels, bench_query,
+                            roofline_report)
+    suites = {
+        "table3_construction": bench_construction.main,
+        "table4_5_query": bench_query.main,
+        "table6_k_sweep": bench_k_sweep.main,
+        "table8_baselines": bench_baselines.main,
+        "kernels": bench_kernels.main,
+        "roofline": roofline_report.main,
+    }
+    print("table,name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn(full=args.full)
+        except Exception as e:
+            print(f"{name},ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""EGNN molecular-property regression on batched synthetic molecules —
+the GNN-family example (segment-ops message passing + equivariant
+coordinate updates).
+
+  PYTHONPATH=src python examples/gnn_molecules.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+from repro.graphs import segment_ops as sops
+from repro.models.gnn import EGNNConfig, egnn_forward, init_egnn
+from repro.optim import adamw
+
+cfg = EGNNConfig("egnn-mol", n_layers=4, d_hidden=64, d_in=16, n_out=1)
+params = init_egnn(jax.random.PRNGKey(0), cfg)[0]
+opt = adamw(lr=1e-3)
+opt_state = opt.init(params)
+
+B, ATOMS, EDGES = 32, 12, 24
+N_PAD, E_PAD = B * ATOMS + 16, 2 * B * EDGES + 16
+
+
+def loss_fn(p, batch):
+    node_out, _ = egnn_forward(p, cfg, batch["feats"], batch["coords"],
+                               batch["edge_src"], batch["edge_dst"])
+    pooled = sops.segment_sum(node_out[..., 0], batch["graph_ids"],
+                              B + 1)[:B]
+    # synthetic target: molecule radius (equivariance-meaningful)
+    return jnp.mean(jnp.square(pooled - batch["targets"]))
+
+
+@jax.jit
+def train_step(p, st, step, batch):
+    loss, g = jax.value_and_grad(loss_fn)(p, batch)
+    p, st, _ = opt.update(g, st, p, step)
+    return p, st, loss
+
+
+t0 = time.time()
+losses = []
+step_ct = jnp.int32(0)
+for i in range(200):
+    b = synthetic.molecule_batch(i, B, ATOMS, EDGES, 16, N_PAD, E_PAD)
+    # physical target = mean squared atom distance from centroid
+    coords = b["coords"][:B * ATOMS].reshape(B, ATOMS, 3)
+    b["targets"] = np.mean(np.sum(
+        (coords - coords.mean(1, keepdims=True)) ** 2, -1), 1).astype(
+        np.float32)
+    batch = {k: jnp.asarray(v) for k, v in b.items()
+             if k in ("feats", "coords", "edge_src", "edge_dst",
+                      "graph_ids", "targets")}
+    params, opt_state, loss = train_step(params, opt_state, step_ct + i,
+                                         batch)
+    losses.append(float(loss))
+    if i % 40 == 0:
+        print(f"step {i:3d} mse {losses[-1]:.4f}")
+print(f"final mse {np.mean(losses[-10:]):.4f} (from {losses[0]:.4f}) "
+      f"in {time.time() - t0:.0f}s")
+assert np.mean(losses[-10:]) < losses[0]

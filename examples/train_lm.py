@@ -1,0 +1,60 @@
+"""Train a ~100M-param dense LM for a few hundred steps on synthetic
+data with the full substrate: sharded step, prefetch pipeline, async
+checkpoints, fault-tolerant runner.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import shapes as SH
+from repro.configs.base import ArchSpec
+from repro.data import synthetic
+from repro.data.pipeline import PrefetchPipeline
+from repro.fault import FaultTolerantRunner, RunnerConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import init_state
+from repro.models.transformer import LMConfig
+from repro.train.steps import build_bundle
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+args = ap.parse_args()
+
+# ~100M params: 12L x 768d (GPT2-small-ish) with GQA + SwiGLU
+cfg = LMConfig("lm100m", n_layers=12, d_model=768, n_heads=12,
+               n_kv_heads=4, d_ff=2048, vocab=32768, q_chunk=128)
+print(f"params: {cfg.param_count() / 1e6:.1f}M")
+spec = ArchSpec(
+    arch_id="lm100m", family="lm", model_cfg=cfg,
+    shapes={"train": SH.LMShape("train", "train", args.seq, args.batch)})
+
+mesh = make_host_mesh(1)
+with mesh:
+    bundle = build_bundle(spec, "train", mesh)
+    step = bundle.jitted()
+    state = init_state(spec, mesh, bundle)
+
+pipe = PrefetchPipeline(
+    lambda s: synthetic.lm_batch(0, s, args.batch, args.seq, cfg.vocab),
+    depth=2)
+runner = FaultTolerantRunner(
+    lambda st, b: step(st, b), state, pipe,
+    RunnerConfig(ckpt_dir="/tmp/lm100m_ckpt", ckpt_every=100))
+
+hist = []
+t0 = time.time()
+runner.run(args.steps, on_metrics=lambda s, m: (
+    hist.append(float(np.asarray(m["loss"]))),
+    print(f"step {s:4d} loss {hist[-1]:.4f} "
+          f"({(time.time() - t0) / s:.2f}s/step)") if s % 25 == 0 else None))
+pipe.stop()
+print(f"final loss {hist[-1]:.4f} (from {hist[0]:.4f}); "
+      f"{args.steps} steps in {time.time() - t0:.0f}s")
+assert hist[-1] < hist[0], "loss should decrease"

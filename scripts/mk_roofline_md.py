@@ -1,0 +1,32 @@
+"""Render experiments/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.roofline_report import load, model_flops, _dev
+
+recs = load()
+ok = [r for r in recs if r.get("ok")]
+fail = [r for r in recs if not r.get("ok")]
+print(f"{len(ok)} ok, {len(fail)} failed")
+for r in fail:
+    print("FAIL:", r["arch"], r["shape"], r["mesh"])
+
+rows = []
+for r in ok:
+    dev = r["devices"]
+    mf = model_flops(r["arch"], r["shape"])
+    hlo = r["flops_per_device"] * dev
+    mem = r.get("mem") or {}
+    temp = (mem.get("temp_size_in_bytes") or 0) / 1e9
+    args = (mem.get("argument_size_in_bytes") or 0) / 1e9
+    t_useful = mf / (197e12 * dev) if mf else None
+    t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+    rows.append((r["arch"], r["shape"], r["mesh"], r["t_compute_s"], r["t_memory_s"],
+                 r["t_collective_s"], r["dominant"], (mf/hlo) if mf else None,
+                 (t_useful/t_dom) if mf else None, args, temp))
+rows.sort()
+print("\n| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | dominant | useful/HLO | roofline frac | args GB/dev | temp GB/dev |")
+print("|---|---|---|---|---|---|---|---|---|---|---|")
+for a, s, m, tc, tm, tl, dom, ur, rf, ag, tp in rows:
+    f = lambda x: ("%.3g" % x) if isinstance(x, float) else "—"
+    print(f"| {a} | {s} | {m} | {f(tc)} | {f(tm)} | {f(tl)} | {dom} | {f(ur) if ur else '—'} | {f(rf) if rf else '—'} | {f(ag)} | {f(tp)} |")

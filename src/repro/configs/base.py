@@ -1,0 +1,156 @@
+"""ArchSpec: binds an architecture config to its shape set, input specs,
+and step functions. One per assigned architecture (+ the paper's own
+IS-LABEL workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import shapes as SH
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def r512(x: int) -> int:
+    """Round up to a multiple of 512 (= lcm of every mesh size we shard
+    over) so explicitly-sharded leading dims always divide the mesh."""
+    return -(-int(x) // 512) * 512
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                       # lm | gnn | recsys | graph_index
+    model_cfg: Any
+    shapes: dict
+    optimizer: str = "adamw"          # adamw | adafactor
+    smoke_cfg_fn: Callable | None = None
+    notes: str = ""
+    fsdp_over_pod: bool = False       # 1T-class models: FSDP across pods
+    param_dtype: str = "float32"
+
+    def shape(self, name: str):
+        return self.shapes[name]
+
+    def input_specs(self, shape_name: str) -> dict:
+        shp = self.shapes[shape_name]
+        if self.family == "lm":
+            return lm_input_specs(self.model_cfg, shp)
+        if self.family == "gnn":
+            return gnn_input_specs(self.model_cfg, shp)
+        if self.family == "recsys":
+            return recsys_input_specs(self.model_cfg, shp)
+        if self.family == "graph_index":
+            return islabel_input_specs(self.model_cfg, shp)
+        raise KeyError(self.family)
+
+    def runnable_cells(self):
+        """Shape names that apply to this arch (assignment skip rules)."""
+        out = []
+        for name, shp in self.shapes.items():
+            if getattr(shp, "subquadratic_required", False) \
+                    and self.family == "lm":
+                continue   # pure full-attention archs skip long_500k
+            out.append(name)
+        return out
+
+
+# ----------------------------------------------------------------- LM specs
+def lm_input_specs(cfg, shp: SH.LMShape) -> dict:
+    from repro.models.transformer import abstract_cache
+    b, s = shp.global_batch, shp.seq_len
+    if shp.kind == "train":
+        return {"tokens": sds((b, s), jnp.int32),
+                "targets": sds((b, s), jnp.int32)}
+    if shp.kind == "prefill":
+        return {"tokens": sds((b, s), jnp.int32)}
+    if shp.kind == "decode":
+        return {"cache": abstract_cache(cfg, b, s),
+                "last_tokens": sds((b, 1), jnp.int32)}
+    raise KeyError(shp.kind)
+
+
+# ---------------------------------------------------------------- GNN specs
+def gnn_minibatch_dims(shp: SH.GNNShape):
+    """Padded sampled-subgraph dims for minibatch shapes."""
+    b = shp.batch_nodes
+    f1, f2 = shp.fanout
+    n_sub = b * (1 + f1 + f1 * f2) + 1
+    e_sub = 2 * (b * f1 + b * f1 * f2)
+    return n_sub, e_sub
+
+
+def gnn_input_specs(cfg, shp: SH.GNNShape) -> dict:
+    need_coords = type(cfg).__name__ in ("EGNNConfig", "DimeNetConfig")
+    if shp.kind == "full":
+        n1, e = r512(shp.n_nodes + 1), r512(2 * shp.n_edges)
+    elif shp.kind == "minibatch":
+        n1, e = gnn_minibatch_dims(shp)
+        n1, e = r512(n1), r512(e)
+    elif shp.kind == "molecule":
+        n1 = r512(shp.batch_graphs * shp.n_nodes + 1)
+        e = r512(2 * shp.batch_graphs * shp.n_edges)
+    else:
+        raise KeyError(shp.kind)
+    d = {"feats": sds((n1, shp.d_feat), jnp.float32),
+         "edge_src": sds((e,), jnp.int32),
+         "edge_dst": sds((e,), jnp.int32),
+         "deg": sds((n1,), jnp.float32)}
+    if shp.kind == "molecule":
+        d["graph_ids"] = sds((n1,), jnp.int32)
+        d["targets"] = sds((shp.batch_graphs,), jnp.float32)
+    else:
+        d["labels"] = sds((n1,), jnp.int32)
+        d["mask"] = sds((n1,), jnp.float32)
+    if need_coords:
+        d["coords"] = sds((n1, 3), jnp.float32)
+    if type(cfg).__name__ == "DimeNetConfig":
+        t_cap = min(r512(4 * e), 1 << 28)   # capped triplet list (DESIGN §4)
+        d["trip_kj"] = sds((t_cap,), jnp.int32)
+        d["trip_ji"] = sds((t_cap,), jnp.int32)
+        d["atom_z"] = sds((n1,), jnp.int32)
+    return d
+
+
+# ------------------------------------------------------------- recsys specs
+def recsys_input_specs(cfg, shp: SH.RecShape) -> dict:
+    b, s = shp.batch, cfg.seq_len
+    d = {"user": sds((b,), jnp.int32),
+         "hist_items": sds((b, s), jnp.int32),
+         "hist_cats": sds((b, s), jnp.int32),
+         "hist_mask": sds((b, s), jnp.float32),
+         "target_item": sds((b,), jnp.int32),
+         "target_cat": sds((b,), jnp.int32)}
+    if shp.kind == "train":
+        d["label"] = sds((b,), jnp.int32)
+    if shp.kind == "retrieval":
+        # 1M candidates padded to 2^20 for even sharding (DESIGN.md §4)
+        d["cand_items"] = sds((r512(shp.n_candidates),), jnp.int32)
+    return d
+
+
+# ----------------------------------------------------- IS-LABEL (the paper)
+def islabel_input_specs(cfg, shp: SH.IndexShape) -> dict:
+    if shp.kind == "query":
+        nrows = r512(shp.n_vertices + 1)
+        return {"lbl_ids": sds((nrows, shp.l_cap), jnp.int32),
+                "lbl_d": sds((nrows, shp.l_cap), jnp.float32),
+                "core_pos": sds((nrows,), jnp.int32),
+                "ce_src": sds((shp.core_edges,), jnp.int32),
+                "ce_dst": sds((shp.core_edges,), jnp.int32),
+                "ce_w": sds((shp.core_edges,), jnp.float32),
+                "s": sds((shp.q_batch,), jnp.int32),
+                "t": sds((shp.q_batch,), jnp.int32)}
+    if shp.kind == "build_level":
+        return {"src": sds((shp.e_cap,), jnp.int32),
+                "dst": sds((shp.e_cap,), jnp.int32),
+                "w": sds((shp.e_cap,), jnp.float32),
+                "via": sds((shp.e_cap,), jnp.int32),
+                "active": sds((shp.n_vertices,), jnp.bool_)}
+    raise KeyError(shp.kind)

@@ -1,0 +1,23 @@
+"""dien — assigned recsys architecture.
+
+embed_dim=18, seq_len=100, gru_dim=108, MLP 200-80, AUGRU interaction
+[arXiv:1809.03672; unverified]. Embedding tables are the recsys-scale
+hot path (67M item rows, mod-sharded over the model axis).
+"""
+import dataclasses
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import RECSYS_SHAPES
+from repro.models.dien import DIENConfig
+
+CONFIG = DIENConfig(name="dien", embed_dim=18, seq_len=100, gru_dim=108,
+                    mlp_dims=(200, 80))
+
+
+def get_spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="dien", family="recsys", model_cfg=CONFIG,
+        shapes=dict(RECSYS_SHAPES),
+        smoke_cfg_fn=lambda: dataclasses.replace(
+            CONFIG, n_items=1000, n_cats=50, n_users=100, seq_len=12),
+        notes="[arXiv:1809.03672; unverified]")

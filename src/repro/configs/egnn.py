@@ -1,0 +1,23 @@
+"""egnn — assigned GNN architecture.
+
+4-layer E(n)-equivariant GNN, d_hidden=64 [arXiv:2102.09844; paper].
+Scalar-distance messages + equivariant coordinate updates; no spherical
+harmonics. Coordinates for non-molecular shape cells are synthesized
+node attributes (DESIGN.md §4).
+"""
+import dataclasses
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import GNN_SHAPES
+from repro.models.gnn import EGNNConfig
+
+CONFIG = EGNNConfig(name="egnn", n_layers=4, d_hidden=64, d_in=16, n_out=1)
+
+
+def get_spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="egnn", family="gnn", model_cfg=CONFIG,
+        shapes=dict(GNN_SHAPES),
+        smoke_cfg_fn=lambda: dataclasses.replace(CONFIG, d_in=8, d_hidden=8,
+                                                 n_layers=2),
+        notes="[arXiv:2102.09844; paper]")

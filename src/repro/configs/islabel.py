@@ -1,0 +1,22 @@
+"""islabel — the paper's own workload as a servable config.
+
+Query serving over a distance-label index (labels sharded by vertex,
+core graph replicated per pod, query batches data-parallel) and one
+hierarchy-peeling build level (edge-sharded).
+"""
+import dataclasses
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import ISLABEL_SHAPES, IndexShape
+from repro.core.config import IndexConfig
+
+CONFIG = IndexConfig()
+
+
+def get_spec() -> ArchSpec:
+    return ArchSpec(
+        arch_id="islabel", family="graph_index", model_cfg=CONFIG,
+        shapes=dict(ISLABEL_SHAPES),
+        smoke_cfg_fn=lambda: dataclasses.replace(CONFIG, l_cap=64,
+                                                 label_chunk=256),
+        notes="IS-LABEL query/build serving (the paper's technique)")

@@ -1,0 +1,7 @@
+# IS-LABEL: the paper's primary contribution, as a composable JAX module.
+from repro.core.config import IndexConfig, BuildStats
+from repro.core.index import ISLabelIndex
+from repro.core.query import QueryEngine, label_intersect_mu, core_relax
+from repro.core.hierarchy import build_hierarchy, Hierarchy
+from repro.core.labeling import build_labels
+from repro.core import ref

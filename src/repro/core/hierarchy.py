@@ -1,0 +1,173 @@
+"""Vertex-hierarchy construction (paper §4.1, §5.1; Algorithms 2+3).
+
+Each level: pick an independent set L_i of G_i (mis.py), record the
+adjacency of L_i at removal time (``ADJ(L_i)`` — these become the
+*up-edges* used for labeling and path reconstruction), then rebuild the
+edge list: surviving edges + augmenting edges (u,w) for every 2-path
+u-v-w through a removed v, deduped keeping min weight (Alg. 3's external
+sort-merge, expressed as lexsort + segment_min).
+
+The level loop is host-driven; each step is one fixed-shape jitted call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import IndexConfig
+from repro.core.mis import independent_set
+from repro.graphs import csr as gcsr
+from repro.graphs import segment_ops as sops
+
+
+@dataclasses.dataclass
+class Hierarchy:
+    """Host-side result of the peeling loop."""
+    n: int
+    k: int                      # level of the core (vertices in G_k)
+    level: np.ndarray           # int32[n], 1..k
+    # up-edges: for every non-core v, its adjacency in G_{level(v)}
+    up_ids: np.ndarray          # int32[n+1, d_cap], sentinel n
+    up_w: np.ndarray            # float32[n+1, d_cap], inf pad
+    up_via: np.ndarray          # int32[n+1, d_cap], -1 = original edge
+    # core graph (G_k) in *global* vertex ids
+    core_src: np.ndarray
+    core_dst: np.ndarray
+    core_w: np.ndarray
+    core_via: np.ndarray
+    level_sizes: list
+    graph_sizes: list
+    mis_rounds: list
+
+
+@partial(jax.jit, static_argnames=("n", "d_cap", "aug_cap"))
+def peel_level(src, dst, w, via, active, rng, n: int, d_cap: int, aug_cap: int):
+    """One hierarchy level. Returns the new edge list + bookkeeping.
+
+    All arrays fixed-shape; counters returned for host-side overflow
+    checks. e_cap is implied by src.shape.
+    """
+    e_cap = src.shape[0]
+    valid = src < n
+    in_is, rounds = independent_set(src, dst, valid, active, rng, n, d_cap)
+
+    # --- ADJ(L_i): neighbor matrix rows of IS vertices --------------------
+    nbr_ids, nbr_w, nbr_via, _ = gcsr.neighbor_matrix(
+        gcsr.EdgeList(src, dst, w, via, n_nodes=n), d_cap)
+
+    # --- compact IS-incident edges into the augmentation buffer -----------
+    is_src = in_is[jnp.where(valid, src, 0)] & valid   # edge (v,u), v in L_i
+    pos = jnp.cumsum(is_src.astype(jnp.int32)) - 1
+    tgt = jnp.where(is_src & (pos < aug_cap), pos, aug_cap)
+    a_v = jnp.full((aug_cap + 1,), n, jnp.int32).at[tgt].set(
+        jnp.where(is_src, src, n), mode="drop")[:aug_cap]
+    a_u = jnp.full((aug_cap + 1,), n, jnp.int32).at[tgt].set(
+        jnp.where(is_src, dst, n), mode="drop")[:aug_cap]
+    a_w = jnp.full((aug_cap + 1,), jnp.inf, jnp.float32).at[tgt].set(
+        jnp.where(is_src, w, jnp.inf), mode="drop")[:aug_cap]
+    n_is_edges = jnp.sum(is_src.astype(jnp.int32))
+
+    # --- augmenting pairs: (u, partner) for each partner slot of v --------
+    # a_* rows: edge (v, u); partners = nbr rows of v
+    p_ids = nbr_ids[a_v]                    # [aug_cap, d_cap]
+    p_w = nbr_w[a_v]
+    pair_ok = (p_ids < n) & (p_ids != a_u[:, None]) & (a_u[:, None] < n)
+    pair_src = jnp.where(pair_ok, jnp.broadcast_to(a_u[:, None], p_ids.shape), n)
+    pair_dst = jnp.where(pair_ok, p_ids, n)
+    pair_w = jnp.where(pair_ok, a_w[:, None] + p_w, jnp.inf)
+    pair_via = jnp.where(pair_ok, jnp.broadcast_to(a_v[:, None], p_ids.shape), -1)
+
+    # --- surviving edges ---------------------------------------------------
+    drop = in_is[jnp.where(valid, src, 0)] | in_is[jnp.where(valid, dst, 0)]
+    keep = valid & ~drop
+    k_src = jnp.where(keep, src, n)
+    k_dst = jnp.where(keep, dst, n)
+    k_w = jnp.where(keep, w, jnp.inf)
+    k_via = jnp.where(keep, via, -1)
+
+    all_src = jnp.concatenate([k_src, pair_src.reshape(-1)])
+    all_dst = jnp.concatenate([k_dst, pair_dst.reshape(-1)])
+    all_w = jnp.concatenate([k_w, pair_w.reshape(-1)])
+    all_via = jnp.concatenate([k_via, pair_via.reshape(-1)])
+
+    o_src, o_dst, o_w, o_via, n_unique = gcsr.dedup_min_edges(
+        all_src, all_dst, all_w, all_via, n, e_cap)
+
+    n_is = jnp.sum(in_is.astype(jnp.int32))
+    return (o_src, o_dst, o_w, o_via, in_is, nbr_ids, nbr_w, nbr_via,
+            n_unique, n_is, n_is_edges, rounds)
+
+
+def build_hierarchy(n: int, src, dst, w, cfg: IndexConfig) -> Hierarchy:
+    """Host loop: peel levels until the size-reduction stop rule (§5.1)."""
+    if (cfg.d_cap + 2) * (n + 1) >= 2 ** 32:
+        raise ValueError("n too large for uint32 MIS keys; lower d_cap or shard")
+    m0 = len(src)
+    e_cap = cfg.e_cap(m0)
+    aug_cap = cfg.aug_cap(m0)
+    g = gcsr.from_host_edges(src, dst, w, n, e_cap)
+    rng = jax.random.PRNGKey(cfg.seed)
+
+    level = np.zeros(n, np.int32)
+    up_ids = np.full((n + 1, cfg.d_cap), n, np.int32)
+    up_w = np.full((n + 1, cfg.d_cap), np.inf, np.float32)
+    up_via = np.full((n + 1, cfg.d_cap), -1, np.int32)
+    active = jnp.ones(n, bool)
+
+    cur_src, cur_dst, cur_w, cur_via = g.src, g.dst, g.weight, g.via
+    n_verts = n
+    n_edges = m0
+    graph_sizes = [n_verts + n_edges // 2]
+    level_sizes, mis_rounds = [], []
+    k = 1
+    for i in range(1, cfg.k_max + 1):
+        rng, sub = jax.random.split(rng)
+        (o_src, o_dst, o_w, o_via, in_is, nbr_ids, nbr_w, nbr_via,
+         n_unique, n_is, n_is_edges, rounds) = peel_level(
+            cur_src, cur_dst, cur_w, cur_via, active, sub, n, cfg.d_cap, aug_cap)
+        n_is_h = int(n_is)
+        if int(n_unique) > e_cap:
+            raise RuntimeError(
+                f"edge capacity overflow at level {i}: {int(n_unique)} > {e_cap}; "
+                f"raise IndexConfig.e_cap_factor")
+        if int(n_is_edges) > aug_cap:
+            raise RuntimeError(
+                f"augmentation buffer overflow at level {i}; raise aug_cap_factor")
+        if n_is_h == 0:
+            k = i
+            break
+        # record level + up-edges on host
+        is_mask = np.asarray(in_is)
+        level[is_mask] = i
+        up_ids[:n][is_mask] = np.asarray(nbr_ids)[:n][is_mask]
+        up_w[:n][is_mask] = np.asarray(nbr_w)[:n][is_mask]
+        up_via[:n][is_mask] = np.asarray(nbr_via)[:n][is_mask]
+        active = active & ~in_is
+        level_sizes.append(n_is_h)
+        mis_rounds.append(int(rounds))
+
+        n_verts -= n_is_h
+        n_edges = int(n_unique)
+        new_size = n_verts + n_edges // 2
+        cur_src, cur_dst, cur_w, cur_via = o_src, o_dst, o_w, o_via
+        k = i + 1
+        graph_sizes.append(new_size)
+        if cfg.k_force:
+            if k >= cfg.k_force:
+                break
+        elif new_size > cfg.sigma * graph_sizes[-2]:
+            break
+
+    level[level == 0] = k
+
+    c_src, c_dst, c_w, c_via = gcsr.to_host_coo(
+        gcsr.EdgeList(cur_src, cur_dst, cur_w, cur_via, n_nodes=n))
+    return Hierarchy(n=n, k=k, level=level, up_ids=up_ids, up_w=up_w,
+                     up_via=up_via, core_src=c_src, core_dst=c_dst,
+                     core_w=c_w, core_via=c_via, level_sizes=level_sizes,
+                     graph_sizes=graph_sizes, mis_rounds=mis_rounds)

@@ -1,0 +1,357 @@
+"""ISLabelIndex — the public API of the paper's contribution.
+
+  idx = ISLabelIndex.build(n, src, dst, w, IndexConfig())
+  d = idx.query(s_batch, t_batch)           # exact distances, batched
+  path = idx.shortest_path(s, t)            # §8.1 path reconstruction
+  idx.save(dir); ISLabelIndex.load(dir)
+  idx.insert_vertex(u, nbrs, ws) / idx.delete_vertex(u)   # §8.3
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import BuildStats, IndexConfig
+from repro.core.hierarchy import Hierarchy, build_hierarchy
+from repro.core.labeling import build_labels
+from repro.core.query import QueryEngine, label_intersect_mu
+
+
+@dataclasses.dataclass
+class ISLabelIndex:
+    n: int
+    k: int
+    cfg: IndexConfig
+    level: np.ndarray            # int32[n]
+    # device label arrays [n+1, l_cap]
+    lbl_ids: jnp.ndarray
+    lbl_d: jnp.ndarray
+    lbl_pred: jnp.ndarray
+    # up-edge matrix (host, for paths/updates) [n+1, d_cap]
+    up_ids: np.ndarray
+    up_w: np.ndarray
+    up_via: np.ndarray
+    # core graph: global-id COO + local-index device copy
+    core_ids: np.ndarray         # int32[n_core]
+    core_pos_host: np.ndarray    # int32[n+1]
+    core_src: np.ndarray
+    core_dst: np.ndarray
+    core_w: np.ndarray
+    core_via: np.ndarray
+    engine: QueryEngine
+    stats: BuildStats
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(n, src, dst, w, cfg: IndexConfig = IndexConfig()) -> "ISLabelIndex":
+        t0 = time.perf_counter()
+        hier = build_hierarchy(n, src, dst, w, cfg)
+        lbl_ids, lbl_d, lbl_pred = build_labels(hier, cfg)
+        idx = ISLabelIndex._assemble(n, hier, lbl_ids, lbl_d, lbl_pred, cfg,
+                                     m_input=len(src))
+        idx.stats.build_seconds = time.perf_counter() - t0
+        return idx
+
+    @staticmethod
+    def _assemble(n, hier: Hierarchy, lbl_ids, lbl_d, lbl_pred,
+                  cfg: IndexConfig, m_input: int) -> "ISLabelIndex":
+        core_ids = np.flatnonzero(hier.level == hier.k).astype(np.int32)
+        n_core = len(core_ids)
+        core_pos = np.full(n + 1, n_core, np.int32)
+        core_pos[core_ids] = np.arange(n_core, dtype=np.int32)
+        ce_src = core_pos[hier.core_src]
+        ce_dst = core_pos[hier.core_dst]
+        engine = QueryEngine(
+            lbl_ids, lbl_d, jnp.asarray(core_pos),
+            (jnp.asarray(ce_src), jnp.asarray(ce_dst),
+             jnp.asarray(hier.core_w, jnp.float32)),
+            n=n, n_core=n_core, max_rounds=cfg.max_relax_rounds)
+        ids_h = np.asarray(lbl_ids)
+        entries = int((ids_h[:n] < n).sum())
+        stats = BuildStats(
+            n=n, m=m_input, k=hier.k, n_core=n_core,
+            m_core=len(hier.core_src), level_sizes=hier.level_sizes,
+            graph_sizes=hier.graph_sizes, label_entries=entries,
+            label_bytes=entries * 8, mis_rounds=hier.mis_rounds)
+        return ISLabelIndex(
+            n=n, k=hier.k, cfg=cfg, level=hier.level, lbl_ids=lbl_ids,
+            lbl_d=lbl_d, lbl_pred=lbl_pred, up_ids=hier.up_ids, up_w=hier.up_w,
+            up_via=hier.up_via, core_ids=core_ids, core_pos_host=core_pos,
+            core_src=hier.core_src, core_dst=hier.core_dst, core_w=hier.core_w,
+            core_via=hier.core_via, engine=engine, stats=stats)
+
+    # ------------------------------------------------------------------ query
+    def query(self, s, t):
+        """Exact batched distances (float32[Q])."""
+        return self.engine.query(s, t)
+
+    def query_host(self, s, t) -> np.ndarray:
+        return np.asarray(self.query(np.atleast_1d(s), np.atleast_1d(t)))
+
+    def query_types(self, s, t):
+        return self.engine.classify(s, t, self.level, self.k)
+
+    # ------------------------------------------------------------- §8.1 paths
+    def _up_slot(self, v: int, u: int):
+        row = self.up_ids[v]
+        slots = np.flatnonzero(row == u)
+        return int(slots[0]) if len(slots) else -1
+
+    def _expand_edge(self, a: int, b: int, via: int) -> list[int]:
+        """Expand an (augmenting) edge into original-graph vertices
+        [a..b) — recursion over the `via` bookkeeping (§8.1)."""
+        if via < 0:
+            return [a]
+        # via c was removed below both a and b; its up-adjacency contains both
+        sa = self._up_slot(via, a)
+        sb = self._up_slot(via, b)
+        if sa < 0 or sb < 0:     # should not happen on a consistent index
+            return [a]
+        left = self._expand_edge(a, via, int(self.up_via[via, sa]))
+        right = self._expand_edge(via, b, int(self.up_via[via, sb]))
+        return left + right
+
+    def _label_path(self, v: int, x: int) -> list[int]:
+        """Path v -> x following the label pred chain (x an ancestor of v)."""
+        if v == x:
+            return [v]
+        row = np.asarray(self.lbl_ids[v])
+        j = np.searchsorted(row, x)
+        if j >= len(row) or row[j] != x:
+            raise ValueError(f"{x} is not an ancestor of {v}")
+        u = int(np.asarray(self.lbl_pred[v])[j])
+        if u < 0:
+            raise ValueError("inconsistent pred chain")
+        slot = self._up_slot(v, u)
+        hop = self._expand_edge(v, u, int(self.up_via[v, slot]))
+        return hop + self._label_path(u, x)
+
+    def shortest_path(self, s: int, t: int):
+        """Return (distance, [s..t] vertex list in the original graph)."""
+        dist = float(self.query_host([s], [t])[0])
+        if not np.isfinite(dist):
+            return dist, []
+        # meeting vertex: best label-intersection ancestor, or best core pair
+        ids_s, d_s = self.lbl_ids[jnp.array([s])], self.lbl_d[jnp.array([s])]
+        ids_t, d_t = self.lbl_ids[jnp.array([t])], self.lbl_d[jnp.array([t])]
+        mu, meet = label_intersect_mu(ids_s, d_s, ids_t, d_t, self.n,
+                                      self.cfg.l_cap)
+        if float(mu[0]) <= dist + 1e-6 and int(meet[0]) < self.n:
+            w = int(meet[0])
+            left = self._label_path(s, w)
+            right = self._label_path(t, w)
+            return dist, left + right[::-1][1:]
+        # path passes through the core: host Dijkstra on G_k with label seeds
+        path = self._core_path(s, t, dist)
+        return dist, path
+
+    def _core_path(self, s: int, t: int, dist: float):
+        import heapq
+        n_core = len(self.core_ids)
+        seeds = {}
+        for side, v in ((0, s), (1, t)):
+            row_i = np.asarray(self.lbl_ids[v])
+            row_d = np.asarray(self.lbl_d[v])
+            sd = {}
+            for i, u in enumerate(row_i):
+                u = int(u)
+                if u < self.n and self.level[u] == self.k:
+                    sd[u] = float(row_d[i])
+            seeds[side] = sd
+        # adjacency of core in global ids
+        order = np.argsort(self.core_src, kind="stable")
+        cs, cd, cw = (self.core_src[order], self.core_dst[order],
+                      self.core_w[order])
+        cvia = self.core_via[order]
+        indptr = np.zeros(self.n + 1, np.int64)
+        np.add.at(indptr, cs + 1, 1)
+        indptr = np.cumsum(indptr)
+
+        def sssp(sd):
+            dd, par = dict(sd), {u: (None, -1) for u in sd}
+            pq = [(d, u) for u, d in sd.items()]
+            heapq.heapify(pq)
+            done = set()
+            while pq:
+                du, u = heapq.heappop(pq)
+                if u in done:
+                    continue
+                done.add(u)
+                for e in range(indptr[u], indptr[u + 1]):
+                    v2, alt = int(cd[e]), du + float(cw[e])
+                    if alt < dd.get(v2, np.inf):
+                        dd[v2] = alt
+                        par[v2] = (u, int(cvia[e]))
+                        heapq.heappush(pq, (alt, v2))
+            return dd, par
+
+        ds, ps = sssp(seeds[0])
+        dt, pt = sssp(seeds[1])
+        meet = min((ds.get(u, np.inf) + dt.get(u, np.inf), u) for u in ds)[1]
+
+        def unwind(par, sd, v, side):
+            out = [v]
+            while par[v][0] is not None:
+                u, via = par[v]
+                # expand (u -> v) into original vertices, then continue from u
+                out = self._expand_edge(u, v, via) + out
+                v = u
+            # label path from the query endpoint to the seed vertex
+            endpoint = s if side == 0 else t
+            head = self._label_path(endpoint, v)
+            return head[:-1] + out
+        left = unwind(ps, seeds[0], meet, 0)
+        right = unwind(pt, seeds[1], meet, 1)
+        return left + right[::-1][1:]
+
+    # ------------------------------------------------------ §8.3 maintenance
+    def _descendants(self, v: int):
+        """Vertices whose label contains v (BFS over reversed up-edges)."""
+        rev = {}
+        nz = np.argwhere(self.up_ids[:self.n] < self.n)
+        for a, slot in nz:
+            rev.setdefault(int(self.up_ids[a, slot]), []).append(int(a))
+        out, frontier = set(), [v]
+        while frontier:
+            u = frontier.pop()
+            for c in rev.get(u, []):
+                if c not in out:
+                    out.add(c)
+                    frontier.append(c)
+        return out
+
+    def insert_vertex(self, u: int, nbrs, ws):
+        """§8.3 lazy insert: u joins G_k; label entries (u, d) pushed to the
+        descendants of its non-core neighbors. Host-side, rebuild-free."""
+        assert u < self.n, "grow n before inserting (id must be preallocated)"
+        ids_h = np.array(self.lbl_ids)          # writable host copies
+        d_h = np.array(self.lbl_d)
+        pred_h = np.array(self.lbl_pred)
+        self.level[u] = self.k
+        new_core_edges = ([], [], [])
+        # u itself becomes a core vertex with self label
+        self._set_label_entry(ids_h, d_h, pred_h, u, u, 0.0, -1)
+        for v, wv in zip(nbrs, ws):
+            v = int(v)
+            if self.level[v] == self.k:
+                new_core_edges[0].extend([u, v])
+                new_core_edges[1].extend([v, u])
+                new_core_edges[2].extend([float(wv), float(wv)])
+            else:
+                # add (u, w) to label(v) and propagate to v's descendants
+                self._push_entry(ids_h, d_h, pred_h, v, u, float(wv), v)
+        if new_core_edges[0]:
+            self.core_src = np.concatenate(
+                [self.core_src, np.asarray(new_core_edges[0], np.int32)])
+            self.core_dst = np.concatenate(
+                [self.core_dst, np.asarray(new_core_edges[1], np.int32)])
+            self.core_w = np.concatenate(
+                [self.core_w, np.asarray(new_core_edges[2], np.float32)])
+            self.core_via = np.concatenate(
+                [self.core_via, np.full(len(new_core_edges[0]), -1, np.int32)])
+        if self.level[u] == self.k and u not in set(self.core_ids.tolist()):
+            self.core_ids = np.concatenate(
+                [self.core_ids, np.asarray([u], np.int32)])
+        self._refresh_device(ids_h, d_h, pred_h)
+
+    def _push_entry(self, ids_h, d_h, pred_h, v, u, d, pred):
+        """Insert/improve (u, d) in label(v), then relax v's descendants."""
+        changed = self._set_label_entry(ids_h, d_h, pred_h, v, u, d, pred)
+        if not changed:
+            return
+        for child, wc in self._children_of(v):
+            self._push_entry(ids_h, d_h, pred_h, child, u, d + wc, v)
+
+    def _children_of(self, v):
+        out = []
+        rows, slots = np.nonzero(self.up_ids[:self.n] == v)
+        for r, sl in zip(rows, slots):
+            out.append((int(r), float(self.up_w[r, sl])))
+        return out
+
+    def _set_label_entry(self, ids_h, d_h, pred_h, v, u, d, pred) -> bool:
+        row = ids_h[v]
+        j = np.searchsorted(row, u)
+        if j < row.shape[0] and row[j] == u:
+            if d_h[v, j] <= d:
+                return False
+            d_h[v, j] = d
+            pred_h[v, j] = pred
+            return True
+        if row[-1] < self.n:
+            raise RuntimeError("label row full: raise l_cap and rebuild")
+        ids_h[v] = np.insert(row, j, u)[:-1]
+        d_h[v] = np.insert(d_h[v], j, d)[:-1]
+        pred_h[v] = np.insert(pred_h[v], j, pred)[:-1]
+        return True
+
+    def delete_vertex(self, u: int):
+        """§8.3 lazy delete: drop u's core edges and its entries in the
+        labels of all descendants."""
+        ids_h = np.array(self.lbl_ids)          # writable host copies
+        d_h = np.array(self.lbl_d)
+        pred_h = np.array(self.lbl_pred)
+        keep = (self.core_src != u) & (self.core_dst != u)
+        self.core_src, self.core_dst = self.core_src[keep], self.core_dst[keep]
+        self.core_w, self.core_via = self.core_w[keep], self.core_via[keep]
+        rows = np.unique(np.nonzero(ids_h[:self.n] == u)[0])
+        for v in rows:
+            j = np.searchsorted(ids_h[v], u)
+            ids_h[v] = np.concatenate([np.delete(ids_h[v], j), [self.n]])
+            d_h[v] = np.concatenate([np.delete(d_h[v], j), [np.inf]])
+            pred_h[v] = np.concatenate([np.delete(pred_h[v], j), [-1]])
+        self.level[u] = self.k  # orphaned; queries fall back to core/∞
+        self._refresh_device(ids_h, d_h, pred_h)
+
+    def _refresh_device(self, ids_h, d_h, pred_h):
+        self.lbl_ids = jnp.asarray(ids_h)
+        self.lbl_d = jnp.asarray(d_h)
+        self.lbl_pred = jnp.asarray(pred_h)
+        core_ids = np.flatnonzero(self.level == self.k).astype(np.int32)
+        n_core = len(core_ids)
+        core_pos = np.full(self.n + 1, n_core, np.int32)
+        core_pos[core_ids] = np.arange(n_core, dtype=np.int32)
+        self.core_ids, self.core_pos_host = core_ids, core_pos
+        self.engine = QueryEngine(
+            self.lbl_ids, self.lbl_d, jnp.asarray(core_pos),
+            (jnp.asarray(core_pos[self.core_src]),
+             jnp.asarray(core_pos[self.core_dst]),
+             jnp.asarray(self.core_w, jnp.float32)),
+            n=self.n, n_core=n_core, max_rounds=self.cfg.max_relax_rounds)
+
+    # ------------------------------------------------------------------ io
+    def save(self, path):
+        p = Path(path)
+        p.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(
+            p / "index.npz", level=self.level, lbl_ids=np.asarray(self.lbl_ids),
+            lbl_d=np.asarray(self.lbl_d), lbl_pred=np.asarray(self.lbl_pred),
+            up_ids=self.up_ids, up_w=self.up_w, up_via=self.up_via,
+            core_src=self.core_src, core_dst=self.core_dst,
+            core_w=self.core_w, core_via=self.core_via)
+        meta = {"n": self.n, "k": self.k,
+                "cfg": dataclasses.asdict(self.cfg),
+                "stats": dataclasses.asdict(self.stats)}
+        (p / "meta.json").write_text(json.dumps(meta))
+
+    @staticmethod
+    def load(path) -> "ISLabelIndex":
+        p = Path(path)
+        meta = json.loads((p / "meta.json").read_text())
+        z = np.load(p / "index.npz")
+        cfg = IndexConfig(**meta["cfg"])
+        hier = Hierarchy(
+            n=meta["n"], k=meta["k"], level=z["level"], up_ids=z["up_ids"],
+            up_w=z["up_w"], up_via=z["up_via"], core_src=z["core_src"],
+            core_dst=z["core_dst"], core_w=z["core_w"], core_via=z["core_via"],
+            level_sizes=[], graph_sizes=[], mis_rounds=[])
+        idx = ISLabelIndex._assemble(
+            meta["n"], hier, jnp.asarray(z["lbl_ids"]), jnp.asarray(z["lbl_d"]),
+            jnp.asarray(z["lbl_pred"]), cfg, m_input=meta["stats"]["m"])
+        idx.stats = BuildStats(**meta["stats"])
+        return idx

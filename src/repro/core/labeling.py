@@ -1,0 +1,121 @@
+"""Top-down vertex labeling (paper §6.1.4, Algorithm 4).
+
+Corollary 1: label(v) = {(v,0)} ∪ merge of label(u) (+ edge weight) over
+v's up-neighbors u in G_{ℓ(v)}. Processing levels k-1 → 1 guarantees
+every up-neighbor's label is final before it is consumed.
+
+The paper's block-nested-loop join becomes a vectorized *min-plus label
+join*: gather up-neighbor label blocks, add the connecting edge weight,
+then per-row sort by (ancestor id, distance) + first-occurrence compact
+— the fixed-shape analogue of the disk merge. Rows are chunked so the
+working set stays bounded (the chunk is the VMEM-resident tile of the
+BNL join).
+
+Label rows are kept sorted by ancestor id — queries rely on this for the
+merge-intersection.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import IndexConfig
+from repro.core.hierarchy import Hierarchy
+
+
+@partial(jax.jit, static_argnames=("l_cap",), donate_argnames=("lbl_ids", "lbl_d",
+                                                               "lbl_pred"))
+def label_chunk_step(lbl_ids, lbl_d, lbl_pred, up_ids, up_w, verts, l_cap: int):
+    """Label one chunk of same-level vertices.
+
+    lbl_*: [n+1, l_cap] global label arrays (row n = sentinel).
+    up_*:  [n+1, d_cap] up-neighbor matrix.
+    verts: int32[chunk] vertex ids of this level (padded with n).
+    """
+    n = lbl_ids.shape[0] - 1
+    c = verts.shape[0]
+    u = up_ids[verts]                       # [c, d]
+    w = up_w[verts]                         # [c, d]
+    d_cap = u.shape[1]
+
+    cand_ids = lbl_ids[u].reshape(c, d_cap * l_cap)
+    cand_d = (w[:, :, None] + lbl_d[u]).reshape(c, d_cap * l_cap)
+    cand_pred = jnp.broadcast_to(u[:, :, None],
+                                 (c, d_cap, l_cap)).reshape(c, d_cap * l_cap)
+    # the up-neighbor itself is an ancestor: it appears as (u, 0) in its own
+    # label (self entry), so (u, w + 0) is generated automatically.
+    self_ok = verts < n
+    ids = jnp.concatenate([jnp.where(self_ok, verts, n)[:, None], cand_ids], 1)
+    d = jnp.concatenate([jnp.where(self_ok, 0.0, jnp.inf)[:, None], cand_d], 1)
+    pred = jnp.concatenate([jnp.full((c, 1), -1, jnp.int32), cand_pred], 1)
+    d = jnp.where(ids >= n, jnp.inf, d)
+    ids = jnp.where(jnp.isinf(d) & (pred >= 0), n, ids)  # drop dead candidates
+
+    # sort rows by (id asc, d asc): stable sort by d, then stable by id
+    o1 = jnp.argsort(d, axis=1, stable=True)
+    ids = jnp.take_along_axis(ids, o1, 1)
+    d = jnp.take_along_axis(d, o1, 1)
+    pred = jnp.take_along_axis(pred, o1, 1)
+    o2 = jnp.argsort(ids, axis=1, stable=True)
+    ids = jnp.take_along_axis(ids, o2, 1)
+    d = jnp.take_along_axis(d, o2, 1)
+    pred = jnp.take_along_axis(pred, o2, 1)
+
+    is_first = jnp.concatenate(
+        [jnp.ones((c, 1), bool), ids[:, 1:] != ids[:, :-1]], 1) & (ids < n)
+    posn = jnp.cumsum(is_first.astype(jnp.int32), axis=1) - 1
+    overflow = jnp.any(is_first & (posn >= l_cap))
+
+    rows_ids = jnp.full((c, l_cap + 1), n, jnp.int32)
+    rows_d = jnp.full((c, l_cap + 1), jnp.inf, jnp.float32)
+    rows_pred = jnp.full((c, l_cap + 1), -1, jnp.int32)
+    col = jnp.where(is_first, jnp.minimum(posn, l_cap), l_cap)
+    ridx = jnp.broadcast_to(jnp.arange(c)[:, None], col.shape)
+    rows_ids = rows_ids.at[ridx, col].set(jnp.where(is_first, ids, n),
+                                          mode="drop")[:, :l_cap]
+    rows_d = rows_d.at[ridx, col].set(jnp.where(is_first, d, jnp.inf),
+                                      mode="drop")[:, :l_cap]
+    rows_pred = rows_pred.at[ridx, col].set(jnp.where(is_first, pred, -1),
+                                            mode="drop")[:, :l_cap]
+
+    # write back (pad rows write the sentinel row with sentinel values — safe)
+    lbl_ids = lbl_ids.at[verts].set(rows_ids)
+    lbl_d = lbl_d.at[verts].set(rows_d)
+    lbl_pred = lbl_pred.at[verts].set(rows_pred)
+    return lbl_ids, lbl_d, lbl_pred, overflow
+
+
+def build_labels(hier: Hierarchy, cfg: IndexConfig):
+    """Run Algorithm 4 over the hierarchy. Returns device label arrays."""
+    n, k = hier.n, hier.k
+    l_cap, chunk = cfg.l_cap, cfg.label_chunk
+
+    lbl_ids = np.full((n + 1, l_cap), n, np.int32)
+    lbl_d = np.full((n + 1, l_cap), np.inf, np.float32)
+    core = np.flatnonzero(hier.level == k)
+    lbl_ids[core, 0] = core
+    lbl_d[core, 0] = 0.0
+
+    lbl_ids = jnp.asarray(lbl_ids)
+    lbl_d = jnp.asarray(lbl_d)
+    lbl_pred = jnp.full((n + 1, l_cap), -1, jnp.int32)
+    up_ids = jnp.asarray(hier.up_ids)
+    up_w = jnp.asarray(hier.up_w)
+
+    for i in range(k - 1, 0, -1):
+        verts = np.flatnonzero(hier.level == i)
+        for lo in range(0, len(verts), chunk):
+            part = verts[lo:lo + chunk]
+            pad = np.full(chunk, n, np.int64)
+            pad[:len(part)] = part
+            lbl_ids, lbl_d, lbl_pred, overflow = label_chunk_step(
+                lbl_ids, lbl_d, lbl_pred, up_ids, up_w,
+                jnp.asarray(pad, jnp.int32), l_cap)
+            if bool(overflow):
+                raise RuntimeError(
+                    f"label capacity overflow at level {i}: raise IndexConfig.l_cap "
+                    f"(currently {l_cap})")
+    return lbl_ids, lbl_d, lbl_pred

@@ -1,0 +1,77 @@
+"""Parallel independent-set selection (the paper's Alg. 2, TPU-native).
+
+The paper peels vertices one at a time in ascending degree order. That
+is a serial chain, so we use the classic parallel alternative: Luby-style
+rounds with a *degree-biased* priority key — vertex v enters the set iff
+its key is a strict local minimum among still-undecided eligible
+neighbors. The degree bias preserves the paper's min-degree greedy
+spirit (small labels); random low bits break ties; vertex id breaks the
+rest, making the key a strict total order so every round makes progress.
+
+Vertices with degree > d_cap are ineligible this level — under
+min-degree greedy they would be picked last anyway, and the cap is what
+bounds the augmenting-edge self-join (paper §4.1: the whole point of
+vertex independence is the 2-hop-bounded join).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import segment_ops as sops
+
+_INF_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+def _priority_key(deg, perm, n, d_cap):
+    """uint32 key = deg * n + random-permutation rank.
+
+    ``perm`` is a permutation of [0, n), so keys of eligible vertices are
+    *unique* — a strict total order, hence every Luby round removes at
+    least one vertex and the loop terminates. Requires (d_cap+2)*n < 2^32
+    (checked by the caller)."""
+    d = jnp.minimum(deg, d_cap + 1).astype(jnp.uint32)
+    return d * jnp.uint32(n) + perm.astype(jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def independent_set(src, dst, valid, active, key_rng, n: int, d_cap: int):
+    """One level's independent set.
+
+    Args:
+      src, dst: int32[e_cap] current edge list (sentinel-padded with id n).
+      valid:    bool[e_cap].
+      active:   bool[n] — vertex still present in G_i.
+      key_rng:  PRNG key for tie-breaking.
+      d_cap:    eligibility degree cap.
+
+    Returns (in_is bool[n], rounds int32).
+    """
+    deg = sops.count_per_segment(src, n + 1, mask=valid)[:n]
+    perm = jax.random.permutation(key_rng, n)
+    key = _priority_key(deg, perm, n, d_cap)
+    eligible = active & (deg <= d_cap)
+    key = jnp.where(eligible, key, _INF_KEY)
+
+    def body(state):
+        pool, in_is, rounds = state
+        # min key over pool-neighbors, per vertex
+        contrib = jnp.where(pool[src] & valid, key[src], _INF_KEY)
+        nbr_min = sops.segment_min(contrib, dst, n + 1)[:n]
+        winners = pool & (key < nbr_min)
+        # remove winners and their neighbors from the pool
+        w_nbr = sops.segment_max(
+            jnp.where(winners[src] & valid, 1, 0), dst, n + 1)[:n] > 0
+        pool = pool & ~winners & ~w_nbr
+        return pool, in_is | winners, rounds + 1
+
+    def cond(state):
+        pool, _, _ = state
+        return jnp.any(pool)
+
+    pool0 = eligible
+    _, in_is, rounds = jax.lax.while_loop(cond, body, (pool0, jnp.zeros(n, bool),
+                                                       jnp.int32(0)))
+    return in_is, rounds

@@ -1,0 +1,2 @@
+from repro.data.pipeline import PrefetchPipeline
+from repro.data import synthetic

@@ -1,0 +1,76 @@
+"""Double-buffered host->device prefetch pipeline.
+
+A worker thread keeps ``depth`` batches ahead of the training loop
+(generation + device_put overlap with the device step). The pipeline is
+seekable (``reset(step)``) for fault-tolerant replay.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable
+
+import jax
+
+
+class PrefetchPipeline:
+    def __init__(self, make_batch: Callable[[int], object], depth: int = 2,
+                 device_put: bool = True, shardings=None):
+        self.make_batch = make_batch
+        self.depth = depth
+        self.device_put = device_put
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._next_step = 0
+
+    def _put(self, batch):
+        if not self.device_put:
+            return batch
+        if self.shardings is not None:
+            return jax.tree.map(jax.device_put, batch, self.shardings)
+        return jax.tree.map(jax.device_put, batch)
+
+    def _worker(self, start: int):
+        step = start
+        while not self._stop.is_set():
+            try:
+                b = self._put(self.make_batch(step))
+            except Exception as e:
+                self._q.put(("error", e))
+                return
+            self._q.put(("ok", (step, b)))
+            step += 1
+
+    def reset(self, step: int = 0):
+        self.stop()
+        self._stop = threading.Event()
+        self._q = queue.Queue(maxsize=self.depth)
+        self._next_step = step
+        self._thread = threading.Thread(target=self._worker, args=(step,),
+                                        daemon=True)
+        self._thread.start()
+
+    def __call__(self, step: int):
+        """Fetch the batch for ``step`` (seek-aware)."""
+        if self._thread is None or step != self._next_step:
+            self.reset(step)
+        kind, payload = self._q.get()
+        if kind == "error":
+            raise payload
+        got_step, batch = payload
+        assert got_step == step, (got_step, step)
+        self._next_step = step + 1
+        return batch
+
+    def stop(self):
+        if self._thread is not None:
+            self._stop.set()
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=5)
+            self._thread = None

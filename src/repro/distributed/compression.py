@@ -1,0 +1,87 @@
+"""Cross-pod gradient compression with error feedback.
+
+The pod axis is the slow interconnect (DCN between pods vs ICI inside a
+pod). Baseline multi-pod training all-reduces fp32 gradients across
+pods; this module replaces that with **error-feedback int8**:
+
+  1. residual-corrected gradient g' = g + e  (error feedback state e)
+  2. per-tensor scale s = max|g'| / 127 shared via a tiny f32 all-reduce
+  3. q = round(g'/s) as int8, all-gathered across the pod axis
+     (int8 gather = P*N bytes vs fp32 ring all-reduce ~ 2*4*N bytes:
+     4x less cross-pod traffic at P=2, plus 4x smaller messages)
+  4. dequantized mean becomes the update; e' = g' - dequant(q)
+
+Used inside a ``shard_map`` over the 'pod' axis only — within-pod
+reduction stays fp32. The error-feedback state makes the compression
+unbiased over time (Karimireddy et al., arXiv:1901.09847).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(g, scale):
+    return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_pod(grads, err, mesh, axis: str = "pod"):
+    """grads/err: pytrees already reduced within pod, replicated across
+    the non-pod axes. Returns (mean_grads, new_err)."""
+    n_pods = mesh.shape[axis]
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis) / 127.0 + 1e-12
+        q = quantize_int8(gf, scale)
+        # all-gather int8 across pods, then local mean (cross-pod bytes:
+        # N int8 per pod vs 2N fp32 for ring all-reduce)
+        allq = jax.lax.all_gather(q, axis)              # [P, ...]
+        mean = jnp.mean(dequantize_int8(allq, scale), axis=0)
+        new_e = gf - dequantize_int8(q, scale)
+        return mean.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def make_compressed_grad_fn(loss_and_grad_fn, mesh):
+    """Wrap a per-pod loss/grad fn with cross-pod compressed reduction.
+
+    loss_and_grad_fn(params, batch) must return (loss, grads); the batch
+    is sharded over the pod axis, params replicated across pods, and the
+    error-feedback state carries a leading per-pod axis (each pod owns
+    its own residual). Runs under shard_map on the pod axis with the
+    data/model axes left to GSPMD (auto)."""
+    from jax import shard_map
+
+    def fn(params, err_stacked, batch):
+        def inner(params, err, batch):
+            err = jax.tree.map(lambda e: e[0], err)          # drop pod dim
+            loss, grads = loss_and_grad_fn(params, batch)
+            grads, new_err = compressed_psum_pod(grads, err, mesh)
+            loss = jax.lax.pmean(loss, "pod")
+            return loss, grads, jax.tree.map(lambda e: e[None], new_err)
+
+        return shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P("pod"), P("pod")),
+            out_specs=(P(), P(), P("pod")),
+            check_vma=False, axis_names=frozenset({"pod"}),
+        )(params, err_stacked, batch)
+
+    return fn
+
+
+def init_error_feedback(params, n_pods: int = 1):
+    """Per-pod residual state: leading axis = pod."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params)

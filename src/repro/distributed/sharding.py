@@ -1,0 +1,85 @@
+"""Logical-axis -> mesh-axis sharding rules, per model family.
+
+Params carry logical axis names (see models/*.py ``init_*``); the rules
+below produce PartitionSpecs/NamedShardings. Conventions:
+
+* LM: tensor-parallel over ``model`` (heads / ffn / vocab / experts),
+  FSDP over ``data`` (the ``embed`` dim of weight matrices), pure DP
+  over ``pod`` (weights replicated across pods; gradients reduced
+  cross-pod, optionally compressed). Batch over (pod, data).
+* GNN: edge/node arrays sharded over all mesh axes flattened; model
+  params replicated (they are tiny).
+* RecSys: embedding-table rows over ``model``; batch over (pod, data);
+  dense tower params replicated.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LM_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "experts_router": None,
+    "embed": "data",          # FSDP shard of the weight's embed dim
+    "layers": None,
+}
+
+GNN_RULES = {k: None for k in
+             ("gnn_in", "gnn_hidden", "rbf", "sbf", "bilinear",
+              "mlp_in", "mlp_out")}
+
+RECSYS_RULES = {
+    "table_rows": "model",
+    "table_dim": None,
+    "gru_in": None, "gru_h": None,
+    "mlp_in": None, "mlp_out": None,
+}
+
+FAMILY_RULES = {"lm": LM_RULES, "gnn": GNN_RULES, "recsys": RECSYS_RULES,
+                "graph_index": {}}
+
+
+def spec_for_axes(axes: tuple, rules: dict) -> P:
+    parts = []
+    for ax in axes:
+        r = rules.get(ax, None)
+        parts.append(r)
+    return P(*parts)
+
+
+def tree_shardings(axes_tree, rules: dict, mesh):
+    """Map a logical-axes tree to NamedShardings."""
+    def one(ax):
+        return NamedSharding(mesh, spec_for_axes(ax, rules))
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def like_tree(tree, sharding):
+    """Uniform sharding for every leaf of an (abstract) tree."""
+    return jax.tree.map(lambda _: sharding, tree)
+
+
+def opt_state_shardings(opt_name: str, params_abs, param_shardings, mesh):
+    """Optimizer state shards exactly like its param (ZeRO); Adafactor's
+    factored stats drop the reduced dim from the spec."""
+    if opt_name == "adamw":
+        return {"mu": param_shardings, "nu": param_shardings}
+    assert opt_name == "adafactor"
+
+    def one(p_abs, psh):
+        nd = len(p_abs.shape)
+        spec = tuple(psh.spec) + (None,) * (nd - len(psh.spec))
+        if nd >= 2:
+            return {"vr": NamedSharding(mesh, P(*spec[:-1])),
+                    "vc": NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))}
+        return {"v": NamedSharding(mesh, P(*spec))}
+
+    return jax.tree.map(one, params_abs, param_shardings,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

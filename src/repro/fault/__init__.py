@@ -1,0 +1,2 @@
+from repro.fault.runner import FaultTolerantRunner, RunnerConfig
+from repro.fault.stragglers import StragglerMonitor

@@ -1,0 +1,126 @@
+"""Fault-tolerant training runner.
+
+Wraps any (state, batch) -> (state, metrics) step with the failure
+semantics large fleets need:
+
+  * periodic async checkpoints (CheckpointManager);
+  * NaN/Inf loss -> rollback to the last checkpoint and *skip* the bad
+    data window (data iterator is seekable by step);
+  * exceptions from the step (device loss on real fleets, injected
+    faults in tests) -> bounded retries with rollback;
+  * SIGTERM/preemption -> final checkpoint before exit;
+  * straggler monitor hook (per-step wall time EMA).
+
+Elasticity: checkpoints store global host arrays; on restart with a
+different topology, ``restore`` re-shards onto the new mesh (see
+checkpoint.py). The runner itself is topology-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.fault.stragglers import StragglerMonitor
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 100
+    keep: int = 3
+    max_retries: int = 3
+    nan_tolerance: int = 0          # consecutive non-finite losses allowed
+    handle_sigterm: bool = True
+
+
+class FaultTolerantRunner:
+    def __init__(self, step_fn: Callable, state, make_batch: Callable[[int], object],
+                 cfg: RunnerConfig, shardings=None):
+        """make_batch(step) must be deterministic/seekable so that replay
+        after rollback re-reads the same data (or skips it)."""
+        self.step_fn = step_fn
+        self.state = state
+        self.make_batch = make_batch
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
+                                      every=cfg.ckpt_every)
+        self.shardings = shardings
+        self.monitor = StragglerMonitor()
+        self.step = 0
+        self.events: list[tuple] = []    # (step, kind, info) audit log
+        self._preempted = False
+        if cfg.handle_sigterm:
+            try:
+                signal.signal(signal.SIGTERM, self._on_sigterm)
+            except ValueError:
+                pass                      # non-main thread (tests)
+
+    def _on_sigterm(self, *_):
+        self._preempted = True
+
+    def restore(self):
+        state, step = self.ckpt.restore_latest(self.state,
+                                               shardings=self.shardings)
+        if state is not None:
+            self.state, self.step = state, step
+            self.events.append((step, "restored", None))
+        return self.step
+
+    def run(self, n_steps: int, on_metrics: Callable | None = None):
+        retries = 0
+        bad_streak = 0
+        while self.step < n_steps:
+            if self._preempted:
+                self.ckpt.maybe_save(self.step, self.state, force=True)
+                self.ckpt.wait()
+                self.events.append((self.step, "preempted", None))
+                return self.state
+            t0 = time.perf_counter()
+            try:
+                batch = self.make_batch(self.step)
+                new_state, metrics = self.step_fn(self.state, batch)
+                loss = float(np.asarray(jax.device_get(metrics["loss"])))
+                if not np.isfinite(loss):
+                    bad_streak += 1
+                    self.events.append((self.step, "nan_loss", loss))
+                    if bad_streak > self.cfg.nan_tolerance:
+                        self._rollback(skip_past=self.step + 1)
+                        bad_streak = 0
+                        continue
+                else:
+                    bad_streak = 0
+                self.state = new_state
+                self.step += 1
+                retries = 0
+                self.monitor.record(time.perf_counter() - t0)
+                self.ckpt.maybe_save(self.step, self.state)
+                if on_metrics:
+                    on_metrics(self.step, metrics)
+            except FloatingPointError:
+                raise
+            except Exception as e:     # device failure / injected fault
+                retries += 1
+                self.events.append((self.step, "step_failure", repr(e)))
+                if retries > self.cfg.max_retries:
+                    self.ckpt.wait()
+                    raise
+                self._rollback()
+        self.ckpt.maybe_save(self.step, self.state, force=True)
+        self.ckpt.wait()
+        return self.state
+
+    def _rollback(self, skip_past: int | None = None):
+        state, step = self.ckpt.restore_latest(self.state,
+                                               shardings=self.shardings)
+        if state is not None:
+            self.state = state
+            self.step = max(step, skip_past or 0)
+        elif skip_past is not None:
+            self.step = skip_past        # no checkpoint yet: just skip data
+        self.events.append((self.step, "rollback", None))

@@ -1,0 +1,144 @@
+"""Padded fixed-shape edge-list / CSR containers.
+
+Conventions (used across core/, models/gnn, kernels/):
+  * ``n`` real vertices; vertex id ``n`` is the *sentinel* — every padded
+    edge has ``src = dst = n`` and ``weight = +inf`` so that segment ops
+    with ``num_segments = n + 1`` park padding in a throwaway row.
+  * Undirected graphs store both (u,v) and (v,u).
+  * ``via`` carries the intermediate vertex of an augmenting edge
+    (paper §8.1 path reconstruction); -1 = original edge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs import segment_ops as sops
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["src", "dst", "weight", "via"],
+         meta_fields=["n_nodes"])
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    src: jax.Array      # int32[e_cap]
+    dst: jax.Array      # int32[e_cap]
+    weight: jax.Array   # float32[e_cap], +inf padding
+    via: jax.Array      # int32[e_cap], -1 = original edge
+    n_nodes: int        # static
+
+    @property
+    def e_cap(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_nodes
+
+    def valid(self) -> jax.Array:
+        return self.src < self.n_nodes
+
+    def n_edges(self) -> jax.Array:
+        return jnp.sum(self.valid().astype(jnp.int32))
+
+
+def from_host_edges(src, dst, weight, n_nodes: int, e_cap: int | None = None,
+                    via=None) -> EdgeList:
+    """Build a padded EdgeList from host numpy arrays."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    weight = np.asarray(weight, np.float32)
+    e = src.shape[0]
+    if e_cap is None:
+        e_cap = max(1, e)
+    if e > e_cap:
+        raise ValueError(f"e_cap={e_cap} < {e} edges")
+    pad = e_cap - e
+    s = np.concatenate([src, np.full(pad, n_nodes, np.int32)])
+    d = np.concatenate([dst, np.full(pad, n_nodes, np.int32)])
+    w = np.concatenate([weight, np.full(pad, np.inf, np.float32)])
+    if via is None:
+        via = np.full(e, -1, np.int32)
+    v = np.concatenate([np.asarray(via, np.int32), np.full(pad, -1, np.int32)])
+    return EdgeList(jnp.asarray(s), jnp.asarray(d), jnp.asarray(w), jnp.asarray(v),
+                    n_nodes=n_nodes)
+
+
+def degrees(g: EdgeList) -> jax.Array:
+    """Out-degree per vertex (== degree for symmetric edge lists)."""
+    return sops.count_per_segment(g.src, g.n_nodes + 1, mask=g.valid())[: g.n_nodes]
+
+
+def neighbor_matrix(g: EdgeList, d_cap: int):
+    """Dense padded adjacency: for each vertex a row of up to ``d_cap``
+    (neighbor, weight, via) triples. Vertices with degree > d_cap keep an
+    arbitrary d_cap-subset with ``overflow[v] = True``.
+
+    Returns (nbr_ids [n+1, d_cap] int32 (sentinel pad), nbr_w, nbr_via,
+    overflow [n] bool).  This is the paper's ``ADJ(L_i)`` in fixed shape:
+    only rows of IS vertices (degree <= d_cap by eligibility) are ever
+    consumed, so the subset truncation never loses information in use.
+    """
+    n, e_cap = g.n_nodes, g.e_cap
+    order = jnp.argsort(g.src, stable=True)          # group edges by src
+    s_sorted = g.src[order]
+    # rank within the group = position - first position of the group
+    idx = jnp.arange(e_cap, dtype=jnp.int32)
+    first_of_group = sops.segment_min(idx, s_sorted, n + 1)
+    rank = idx - first_of_group[s_sorted]
+    ok = (s_sorted < n) & (rank < d_cap)
+    flat = jnp.where(ok, s_sorted * d_cap + rank, n * d_cap)  # park at sentinel row
+    nbr_ids = jnp.full(((n + 1) * d_cap,), n, jnp.int32).at[flat].set(
+        jnp.where(ok, g.dst[order], n), mode="drop")
+    nbr_w = jnp.full(((n + 1) * d_cap,), jnp.inf, jnp.float32).at[flat].set(
+        jnp.where(ok, g.weight[order], jnp.inf), mode="drop")
+    nbr_via = jnp.full(((n + 1) * d_cap,), -1, jnp.int32).at[flat].set(
+        jnp.where(ok, g.via[order], -1), mode="drop")
+    deg = degrees(g)
+    overflow = deg > d_cap
+    return (nbr_ids.reshape(n + 1, d_cap), nbr_w.reshape(n + 1, d_cap),
+            nbr_via.reshape(n + 1, d_cap), overflow)
+
+
+def dedup_min_edges(src, dst, weight, via, n_nodes: int, out_cap: int):
+    """Sort (src,dst) pairs, collapse duplicates keeping min weight (and
+    its ``via``), compact into fixed ``out_cap`` arrays.
+
+    The TPU-native version of the paper's external sort-merge (Alg. 3
+    lines 7-8): sort + segment_min instead of disk merge passes.
+    Returns (src, dst, w, via, n_unique) — n_unique may exceed out_cap,
+    callers must check (overflow detection).
+    """
+    t = src.shape[0]
+    order = jnp.lexsort((dst, src))
+    s, d, w, v = src[order], dst[order], weight[order], via[order]
+    is_first = jnp.concatenate([jnp.array([True]),
+                                (s[1:] != s[:-1]) | (d[1:] != d[:-1])])
+    gid = jnp.cumsum(is_first.astype(jnp.int32)) - 1          # group index
+    gmin = sops.segment_min(w, gid, t)
+    gvia = sops.segment_argmin_take(w, v, gid, t)
+    valid_group = is_first & (s < n_nodes)
+    pos = jnp.cumsum(valid_group.astype(jnp.int32)) - 1
+    tgt = jnp.where(valid_group & (pos < out_cap), pos, out_cap)
+    o_src = jnp.full((out_cap + 1,), n_nodes, jnp.int32).at[tgt].set(
+        jnp.where(valid_group, s, n_nodes), mode="drop")[:out_cap]
+    o_dst = jnp.full((out_cap + 1,), n_nodes, jnp.int32).at[tgt].set(
+        jnp.where(valid_group, d, n_nodes), mode="drop")[:out_cap]
+    o_w = jnp.full((out_cap + 1,), jnp.inf, jnp.float32).at[tgt].set(
+        jnp.where(valid_group, gmin[gid], jnp.inf), mode="drop")[:out_cap]
+    o_via = jnp.full((out_cap + 1,), -1, jnp.int32).at[tgt].set(
+        jnp.where(valid_group, gvia[gid], -1), mode="drop")[:out_cap]
+    n_unique = jnp.sum(valid_group.astype(jnp.int32))
+    return o_src, o_dst, o_w, o_via, n_unique
+
+
+def to_host_coo(g: EdgeList):
+    """Pull the valid edges back to host numpy (benchmark/oracle use)."""
+    src = np.asarray(g.src)
+    mask = src < g.n_nodes
+    return (src[mask], np.asarray(g.dst)[mask], np.asarray(g.weight)[mask],
+            np.asarray(g.via)[mask])

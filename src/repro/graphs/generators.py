@@ -1,0 +1,100 @@
+"""Host-side synthetic graph generators (numpy).
+
+Real datasets from the paper (BTC, UK-Web, as-Skitter, wiki-Talk,
+web-Google) are not available offline; these generators reproduce their
+*regimes*: sparse power-law (rmat ~ web/social), low-degree semantic
+(sparse ER ~ BTC with avg deg 2.19), meshes (grid), and community
+graphs (caveman). All return (n, src, dst, weight) with both edge
+directions, no self loops, no duplicates, integer-valued float weights.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _finalize(n, und_edges, rng, max_w, weights=None):
+    """und_edges: (m,2) undirected unique pairs u<v."""
+    und_edges = np.unique(und_edges[und_edges[:, 0] != und_edges[:, 1]], axis=0)
+    u, v = und_edges[:, 0], und_edges[:, 1]
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    pairs = np.unique(np.stack([lo, hi], 1), axis=0)
+    m = pairs.shape[0]
+    if weights is None:
+        weights = rng.integers(1, max_w + 1, size=m).astype(np.float32)
+    src = np.concatenate([pairs[:, 0], pairs[:, 1]]).astype(np.int32)
+    dst = np.concatenate([pairs[:, 1], pairs[:, 0]]).astype(np.int32)
+    w = np.concatenate([weights, weights]).astype(np.float32)
+    return n, src, dst, w
+
+
+def er_graph(n: int, avg_deg: float = 3.0, max_w: int = 4, seed: int = 0):
+    """Sparse Erdos-Renyi — the BTC-like low-degree regime."""
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg / 2)
+    e = rng.integers(0, n, size=(int(m * 1.2), 2))
+    return _finalize(n, e, rng, max_w)
+
+
+def rmat_graph(n_pow: int, avg_deg: float = 8.0, max_w: int = 4, seed: int = 0,
+               a=0.57, b=0.19, c=0.19):
+    """R-MAT power-law graph (web/social regime). n = 2**n_pow."""
+    n = 1 << n_pow
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg / 2)
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    for _ in range(n_pow):
+        q = rng.random(m)
+        sbit = (q >= a + b).astype(np.int64)          # quadrants c,d
+        dbit = ((q >= a) & (q < a + b) | (q >= a + b + c)).astype(np.int64)
+        src = (src << 1) | sbit
+        dst = (dst << 1) | dbit
+    e = np.stack([src, dst], 1)
+    return _finalize(n, e, rng, max_w)
+
+
+def grid_graph(side: int, max_w: int = 4, seed: int = 0):
+    """2D grid — road-network-like regime (max degree 4)."""
+    rng = np.random.default_rng(seed)
+    n = side * side
+    idx = np.arange(n).reshape(side, side)
+    h = np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], 1)
+    v = np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], 1)
+    return _finalize(n, np.concatenate([h, v]), rng, max_w)
+
+
+def caveman_graph(n_communities: int, size: int, p_rewire: float = 0.05,
+                  max_w: int = 4, seed: int = 0):
+    """Connected-caveman — community structure regime."""
+    rng = np.random.default_rng(seed)
+    n = n_communities * size
+    edges = []
+    for ci in range(n_communities):
+        base = ci * size
+        for i in range(size):
+            for j in range(i + 1, size):
+                edges.append((base + i, base + j))
+        edges.append((base + size - 1, (base + size) % n))  # ring link
+    e = np.array(edges, np.int64)
+    rw = rng.random(len(e)) < p_rewire
+    e[rw, 1] = rng.integers(0, n, rw.sum())
+    return _finalize(n, e, rng, max_w)
+
+
+def unit_weights(n, src, dst, w):
+    return n, src, dst, np.ones_like(w)
+
+
+def largest_component_queries(n, src, dst, n_q, seed=0):
+    """Sample query endpoints biased to the largest connected component
+    (mirrors the paper's random 1000-query workloads)."""
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csg
+    rng = np.random.default_rng(seed)
+    adj = sp.coo_matrix((np.ones(len(src)), (src, dst)), shape=(n, n))
+    _, comp = csg.connected_components(adj, directed=False)
+    counts = np.bincount(comp)
+    big = np.flatnonzero(comp == counts.argmax())
+    s = rng.choice(big, n_q)
+    t = rng.choice(big, n_q)
+    return s.astype(np.int32), t.astype(np.int32)

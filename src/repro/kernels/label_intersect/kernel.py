@@ -1,0 +1,69 @@
+"""Batched label-intersection Pallas kernel (the query hot path).
+
+Per query q: μ[q] = min over common ancestor ids of d_s + d_t, over two
+id-sorted label rows (paper Equation 1). The paper's sequential sorted
+merge is branch-heavy; on TPU we do a *tiled equality join*: compare a
+[bq, L] id tile of s against t in 128-wide column chunks, min-reducing
+d_s+d_t where ids match. O(L^2/lane_width) fully-vectorized VPU work
+beats a data-dependent merge on this hardware.
+
+VMEM per block: 4 x [bq, L] operands + [bq, L, 128] intermediate
+(bq=8, L=512 -> ~2 MB), well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _intersect_kernel(ids_s_ref, d_s_ref, ids_t_ref, d_t_ref, mu_ref, *,
+                      n_sentinel, chunk):
+    ids_s = ids_s_ref[...]          # [bq, L] int32, sorted, pad = n_sentinel
+    d_s = d_s_ref[...]
+    ids_t = ids_t_ref[...]
+    d_t = d_t_ref[...]
+    l = ids_s.shape[1]
+
+    def body(c, mu):
+        sl = slice(None)
+        it = jax.lax.dynamic_slice(ids_t, (0, c * chunk),
+                                   (ids_t.shape[0], chunk))   # [bq, ck]
+        dt = jax.lax.dynamic_slice(d_t, (0, c * chunk),
+                                   (d_t.shape[0], chunk))
+        eq = (ids_s[:, :, None] == it[:, None, :]) & \
+             (ids_s[:, :, None] < n_sentinel)
+        tot = jnp.where(eq, d_s[:, :, None] + dt[:, None, :], jnp.inf)
+        return jnp.minimum(mu, jnp.min(tot, axis=(1, 2)))
+
+    mu = jax.lax.fori_loop(0, l // chunk, body,
+                           jnp.full((ids_s.shape[0],), jnp.inf, jnp.float32))
+    mu_ref[...] = mu
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_sentinel", "bq", "chunk", "interpret"))
+def label_intersect_kernel(ids_s, d_s, ids_t, d_t, *, n_sentinel: int,
+                           bq=8, chunk=128, interpret=False):
+    """ids_*: int32[Q, L] sorted ancestor ids (pad = n_sentinel);
+    d_*: float32[Q, L]. Q % bq == 0, L % chunk == 0 (ops.py pads).
+    Returns mu float32[Q]."""
+    q, l = ids_s.shape
+    assert q % bq == 0 and l % chunk == 0
+    kern = functools.partial(_intersect_kernel, n_sentinel=n_sentinel,
+                             chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, l), lambda i: (i, 0)),
+            pl.BlockSpec((bq, l), lambda i: (i, 0)),
+            pl.BlockSpec((bq, l), lambda i: (i, 0)),
+            pl.BlockSpec((bq, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=interpret,
+    )(ids_s, d_s, ids_t, d_t)

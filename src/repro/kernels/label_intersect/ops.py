@@ -1,0 +1,29 @@
+"""jit'd wrapper with shape padding for the label-intersect kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.label_intersect.kernel import label_intersect_kernel
+
+
+def label_intersect(ids_s, d_s, ids_t, d_t, n_sentinel: int, *,
+                    bq=8, chunk=128, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    q, l = ids_s.shape
+    qp = -(-q // bq) * bq
+    lp = -(-l // chunk) * chunk
+
+    def padi(x):
+        return jnp.pad(x, ((0, qp - q), (0, lp - l)),
+                       constant_values=n_sentinel)
+
+    def padd(x):
+        return jnp.pad(x, ((0, qp - q), (0, lp - l)), constant_values=jnp.inf)
+
+    mu = label_intersect_kernel(
+        padi(ids_s.astype(jnp.int32)), padd(d_s.astype(jnp.float32)),
+        padi(ids_t.astype(jnp.int32)), padd(d_t.astype(jnp.float32)),
+        n_sentinel=n_sentinel, bq=bq, chunk=chunk, interpret=interpret)
+    return mu[:q]

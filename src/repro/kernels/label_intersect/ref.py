@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: μ via per-row searchsorted merge (same math as
+repro.core.query.label_intersect_mu)."""
+import jax
+import jax.numpy as jnp
+
+
+def label_intersect_ref(ids_s, d_s, ids_t, d_t, n_sentinel: int):
+    pos = jax.vmap(jnp.searchsorted)(ids_t, ids_s)
+    pos_c = jnp.minimum(pos, ids_t.shape[1] - 1)
+    hit = (jnp.take_along_axis(ids_t, pos_c, 1) == ids_s) & (ids_s < n_sentinel)
+    tot = jnp.where(hit, d_s + jnp.take_along_axis(d_t, pos_c, 1), jnp.inf)
+    return jnp.min(tot, axis=1)

@@ -1,0 +1,29 @@
+"""Public jit'd wrapper: arbitrary shapes via +inf padding (the min-plus
+identity), interpret-mode fallback on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.minplus_matmul.kernel import minplus_matmul_kernel
+
+
+def _pad_to(x, rows, cols, fill):
+    r, c = x.shape
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)), constant_values=fill)
+
+
+def minplus_matmul(a, b, *, bm=128, bn=128, bk=128, interpret=None):
+    """min-plus product for arbitrary [M,K]x[K,N] float32 inputs."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = a.shape
+    _, n = b.shape
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    ap = _pad_to(a.astype(jnp.float32), mp, kp, jnp.inf)
+    bp = _pad_to(b.astype(jnp.float32), kp, np_, jnp.inf)
+    out = minplus_matmul_kernel(ap, bp, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+    return out[:m, :n]

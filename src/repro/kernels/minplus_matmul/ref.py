@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the min-plus matmul."""
+import jax.numpy as jnp
+
+
+def minplus_matmul_ref(a, b):
+    """C[i,j] = min_k A[i,k] + B[k,j] (naive; test shapes only)."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)

@@ -1,0 +1,57 @@
+"""ELL min-plus SpMV Pallas kernel — one wavefront-relaxation round.
+
+new_dist[q, v] = min(dist[q, v], min_j dist[q, nbr[v, j]] + w[v, j])
+
+This is the inner loop of the label-seeded core search (paper Alg. 1
+stage 2) for a batch of queries: the core graph G_k in ELL layout
+(fixed-width in-neighbor lists — G_k is degree-bounded after peeling;
+overflow rows are split by the wrapper). The whole per-query distance
+row stays VMEM-resident (G_k is small by construction — the paper's
+central design point) while output vertex tiles stream through the grid.
+
+TPU note: the inner gather is a VMEM-local vector gather (Mosaic
+`dynamic_gather`); on hardware this kernel is gather-bound, which is
+still far better than HBM-scatter Bellman-Ford since dist rows never
+leave VMEM between rounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relax_kernel(dist_row_ref, dist_tile_ref, nbr_ref, w_ref, o_ref):
+    dist_row = dist_row_ref[...]          # [bq, V]
+    ids = nbr_ref[...]                    # [bv, D] int32 (pad -> col 0)
+    w = w_ref[...]                        # [bv, D] float32 (pad -> inf)
+    bq = dist_row.shape[0]
+    bv, d = ids.shape
+    flat = ids.reshape(-1)                # [bv*D]
+    gathered = jnp.take(dist_row, flat, axis=1).reshape(bq, bv, d)
+    cand = jnp.min(gathered + w[None, :, :], axis=2)       # [bq, bv]
+    o_ref[...] = jnp.minimum(dist_tile_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bv", "interpret"))
+def spmv_relax_kernel(dist, nbr_ids, nbr_w, *, bq=8, bv=128, interpret=False):
+    """dist: [Q, V] f32; nbr_ids: [V, D] int32 in [0, V); nbr_w: [V, D]
+    (+inf padding). Q % bq == 0, V % bv == 0. Returns relaxed [Q, V]."""
+    q, v = dist.shape
+    v2, d = nbr_ids.shape
+    assert v == v2 and q % bq == 0 and v % bv == 0
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=(q // bq, v // bv),
+        in_specs=[
+            pl.BlockSpec((bq, v), lambda i, j: (i, 0)),   # full dist rows
+            pl.BlockSpec((bq, bv), lambda i, j: (i, j)),  # self tile
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, v), jnp.float32),
+        interpret=interpret,
+    )(dist, dist, nbr_ids, nbr_w)

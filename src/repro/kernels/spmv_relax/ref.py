@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the ELL min-plus relaxation round."""
+import jax.numpy as jnp
+
+
+def spmv_relax_ref(dist, nbr_ids, nbr_w):
+    gathered = dist[:, nbr_ids]                     # [Q, V, D]
+    cand = jnp.min(gathered + nbr_w[None], axis=2)  # [Q, V]
+    return jnp.minimum(dist, cand)

@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+A function, not a module-level constant — importing this module never
+touches jax device state. The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel mesh axes (includes 'pod' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)

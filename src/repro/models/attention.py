@@ -1,0 +1,127 @@
+"""GQA attention: chunked-causal training/prefill + KV-cache decode.
+
+Memory design: full [S, S] logits at 32k+ context don't fit, so the
+training/prefill path scans over query chunks (flash-style outer loop;
+the per-chunk [B, H, qc, S] score tile is the bounded working set).
+Decode attends one new token against the cache — O(S) per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+
+
+def init_attention(key, cfg: AttnConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h, kv, dh, e = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p = {"wq": L._dense_init(k1, (e, h * dh)),
+         "wk": L._dense_init(k2, (e, kv * dh)),
+         "wv": L._dense_init(k3, (e, kv * dh)),
+         "wo": L._dense_init(k4, (h * dh, e))}
+    a = {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+         "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h * dh,)), bk=jnp.zeros((kv * dh,)),
+                 bv=jnp.zeros((kv * dh,)))
+        a.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    return p, a
+
+
+def _project_qkv(p, cfg: AttnConfig, x, positions, dtype):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: [B, qc, H, Dh], k: [B, S, KV, Dh] -> [B, H, qc, S] (H = G*KV)."""
+    b, qc, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, qc, kv, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / jnp.sqrt(dh).astype(q.dtype)
+    return s.reshape(b, h, qc, k.shape[1])
+
+
+def _gqa_combine(w, v):
+    """w: [B, H, qc, S], v: [B, S, KV, Dh] -> [B, qc, H, Dh]."""
+    b, h, qc, s = w.shape
+    kv = v.shape[2]
+    g = h // kv
+    wg = w.reshape(b, kv, g, qc, s)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", wg, v)
+    return o.reshape(b, qc, h, v.shape[3])
+
+
+def causal_attention(p, cfg: AttnConfig, x, *, q_chunk: int = 512,
+                     dtype=jnp.bfloat16):
+    """Training/prefill attention. x: [B, S, E]. Returns ([B,S,E], kv)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, cfg, x, positions, dtype)
+    qc = min(q_chunk, s)
+    while s % qc:           # largest chunk <= q_chunk dividing s
+        qc -= 1
+    nchunks = s // qc
+
+    def chunk_fn(carry, qi):
+        q_dyn = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+        scores = _gqa_scores(q_dyn, k).astype(jnp.float32)  # [B,H,qc,S]
+        qpos = qi * qc + jnp.arange(qc)
+        mask = qpos[:, None] >= jnp.arange(s)[None, :]
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        return carry, _gqa_combine(w, v)
+
+    _, outs = jax.lax.scan(chunk_fn, None, jnp.arange(nchunks))
+    o = jnp.moveaxis(outs, 0, 1).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    y = o @ p["wo"].astype(dtype)
+    return y, (k, v)
+
+
+def decode_attention(p, cfg: AttnConfig, x, cache_k, cache_v, cache_len,
+                     *, dtype=jnp.bfloat16):
+    """One-token decode. x: [B, 1, E]; cache_[kv]: [B, Smax, KV, Dh];
+    cache_len: int32[] tokens already in cache. Returns (y, new_k, new_v)."""
+    b, _, _ = x.shape
+    positions = jnp.broadcast_to(cache_len[None, None], (b, 1))
+    q, k, v = _project_qkv(p, cfg, x, positions, dtype)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    scores = _gqa_scores(q, cache_k.astype(dtype)).astype(jnp.float32)
+    smax = cache_k.shape[1]
+    mask = jnp.arange(smax)[None, None, None, :] <= cache_len
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    o = _gqa_combine(w, cache_v.astype(dtype))
+    y = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(dtype)
+    return y, cache_k, cache_v

@@ -1,0 +1,158 @@
+"""DimeNet (directional message passing, arXiv:2003.03123).
+
+Kernel regime: *triplet gather* — messages live on directed edges
+(j -> i) and are updated from incoming messages (k -> j) modulated by an
+angular basis over the (k, j, i) triplet. Not expressible as SpMM; the
+triplet index lists are explicit inputs (host-precomputed for real runs,
+ShapeDtypeStruct stand-ins for the dry-run).
+
+Basis functions: radial Bessel-style envelope RBF (n_radial) and a
+separable radial x angular SBF (n_spherical x n_radial) using cos(l*θ)
+Chebyshev angular modes — structurally faithful to the paper's
+bilinear interaction block (n_bilinear down-projection), with the
+spherical-Bessel zeros simplified to integer frequencies (documented
+deviation; identical compute/memory shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import segment_ops as sops
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_out: int = 1
+    envelope_p: int = 6
+
+
+def rbf_basis(d, cfg: DimeNetConfig):
+    """[E] -> [E, n_radial] Bessel RBF with polynomial envelope."""
+    x = d / cfg.cutoff
+    p = cfg.envelope_p
+    env = (1.0 - (p + 1) * (p + 2) / 2 * x ** p + p * (p + 2) * x ** (p + 1)
+           - p * (p + 1) / 2 * x ** (p + 2))
+    n = jnp.arange(1, cfg.n_radial + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cfg.cutoff) * jnp.sin(
+        n[None, :] * jnp.pi * x[:, None]) / jnp.maximum(d[:, None], 1e-9)
+    return basis * env[:, None]
+
+
+def sbf_basis(d, angle, cfg: DimeNetConfig):
+    """[T],[T] -> [T, n_spherical * n_radial] separable angular basis."""
+    rad = rbf_basis(d, cfg)                                # [T, R]
+    l = jnp.arange(cfg.n_spherical, dtype=jnp.float32)
+    ang = jnp.cos(l[None, :] * angle[:, None])             # [T, S]
+    return (ang[:, :, None] * rad[:, None, :]).reshape(
+        d.shape[0], cfg.n_spherical * cfg.n_radial)
+
+
+def init_dimenet(key, cfg: DimeNetConfig):
+    h, r, s, b = cfg.d_hidden, cfg.n_radial, cfg.n_spherical, cfg.n_bilinear
+    p, a = {}, {}
+    k0, k1, k2, key = jax.random.split(key, 4)
+    p["emb_atom"] = L._dense_init(k0, (95, h))           # atomic numbers
+    a["emb_atom"] = ("gnn_in", "gnn_hidden")
+    p["emb_rbf"], a["emb_rbf"] = L.init_linear(k1, r, h)
+    p["emb_msg"], a["emb_msg"] = L.init_mlp(k2, [3 * h, h])
+    for i in range(cfg.n_blocks):
+        ka, kb, kc, kd, ke, key = jax.random.split(key, 6)
+        p[f"blk{i}"] = {
+            "w_rbf": L.init_linear(ka, r, h)[0],
+            "w_sbf": L.init_linear(kb, s * r, b)[0],
+            "w_kj": L.init_linear(kc, h, h)[0],
+            "w_ji": L.init_linear(kd, h, h)[0],
+            "bilinear": jax.random.normal(ke, (b, h, h), jnp.float32) / h,
+            "mlp": L.init_mlp(jax.random.fold_in(ke, 1), [h, h, h])[0],
+        }
+        a[f"blk{i}"] = {
+            "w_rbf": {"w": ("rbf", "gnn_hidden")},
+            "w_sbf": {"w": ("sbf", "bilinear")},
+            "w_kj": {"w": ("gnn_hidden", "gnn_hidden")},
+            "w_ji": {"w": ("gnn_hidden", "gnn_hidden")},
+            "bilinear": ("bilinear", "gnn_hidden", "gnn_hidden"),
+            "mlp": L.init_mlp(jax.random.fold_in(ke, 2), [h, h, h])[1],
+        }
+        ko, key = jax.random.split(key)
+        p[f"out{i}"], a[f"out{i}"] = L.init_mlp(ko, [h, h, cfg.n_out])
+    return p, a
+
+
+def dimenet_forward(p, cfg: DimeNetConfig, z, coords, edge_src, edge_dst,
+                    trip_kj, trip_ji):
+    """z: int32[n+1] atomic numbers; coords: [n+1, 3].
+    edge_*: int32[E] (sentinel n). trip_kj/trip_ji: int32[T] indices into
+    the edge list: message (k->j) feeds message (j->i) (sentinel E).
+    Returns (node_out [n+1, n_out], messages) — callers pool."""
+    n1 = z.shape[0]
+    e = edge_src.shape[0]
+    act = jax.nn.silu
+
+    diff = coords[edge_src] - coords[edge_dst]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, -1), 1e-12))
+    rbf = rbf_basis(dist, cfg)                              # [E, R]
+
+    # triplet angle between edge (k->j) and (j->i)
+    d1 = diff[jnp.minimum(trip_kj, e - 1)]
+    d2 = -diff[jnp.minimum(trip_ji, e - 1)]
+    cosang = jnp.sum(d1 * d2, -1) / jnp.maximum(
+        jnp.linalg.norm(d1, axis=-1) * jnp.linalg.norm(d2, axis=-1), 1e-9)
+    angle = jnp.arccos(jnp.clip(cosang, -1 + 1e-7, 1 - 1e-7))
+    d_kj = dist[jnp.minimum(trip_kj, e - 1)]
+    sbf = sbf_basis(d_kj, angle, cfg)                       # [T, S*R]
+    trip_ok = (trip_kj < e) & (trip_ji < e)
+    sbf = jnp.where(trip_ok[:, None], sbf, 0.0)
+
+    hz = p["emb_atom"][jnp.minimum(z, 94)]
+    m = L.mlp(p["emb_msg"], jnp.concatenate(
+        [hz[edge_src], hz[edge_dst], L.linear(p["emb_rbf"], rbf)], -1),
+        act=act)                                            # [E, H]
+
+    out = jnp.zeros((n1, cfg.n_out), jnp.float32)
+    for i in range(cfg.n_blocks):
+        blk = p[f"blk{i}"]
+        # directional interaction: m_kj -> (j->i), modulated by sbf
+        m_kj = (m @ blk["w_kj"]["w"])[jnp.minimum(trip_kj, e - 1)]  # [T, H]
+        sb = sbf @ blk["w_sbf"]["w"]                        # [T, B]
+        inter = jnp.einsum("tb,bhg,th->tg", sb, blk["bilinear"], m_kj)
+        agg = sops.segment_sum(
+            jnp.where(trip_ok[:, None], inter, 0.0),
+            jnp.minimum(trip_ji, e), e + 1)[:e]             # [E, H]
+        m = act(m @ blk["w_ji"]["w"] + agg * (rbf @ blk["w_rbf"]["w"]))
+        m = m + L.mlp(blk["mlp"], m, act=act)
+        # per-block output: aggregate messages to atoms
+        atom = sops.segment_sum(m, edge_dst, n1)
+        out = out + L.mlp(p[f"out{i}"], atom, act=act)
+    return out, m
+
+
+def build_triplets(edge_src, edge_dst, n, t_cap: int):
+    """Host helper: triplet indices (k->j, j->i) with k != i.
+    Returns (trip_kj, trip_ji) int32[t_cap], sentinel = len(edges)."""
+    import numpy as np
+    e = len(edge_src)
+    by_dst = {}
+    for idx in range(e):
+        by_dst.setdefault(int(edge_dst[idx]), []).append(idx)
+    kj, ji = [], []
+    for idx in range(e):
+        j = int(edge_src[idx])          # edge (j -> i)
+        for kidx in by_dst.get(j, []):
+            if int(edge_src[kidx]) != int(edge_dst[idx]):   # k != i
+                kj.append(kidx)
+                ji.append(idx)
+    kj, ji = kj[:t_cap], ji[:t_cap]
+    pad = t_cap - len(kj)
+    return (np.asarray(kj + [e] * pad, np.int32),
+            np.asarray(ji + [e] * pad, np.int32))

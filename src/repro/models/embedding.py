@@ -1,0 +1,62 @@
+"""Sharded embedding tables + EmbeddingBag.
+
+JAX has no nn.EmbeddingBag and no CSR sparse: the lookup is
+``jnp.take`` + ``segment_sum`` (multi-hot bags). Two distribution
+strategies for the huge recsys tables (10^6-10^9 rows):
+
+* ``gspmd``: plain take on a row-sharded table; GSPMD partitions the
+  gather into shard-local lookups + all-reduce (its sharded-gather pass
+  emits the same mask/psum pattern as the manual version).
+* ``shard_map``: explicit mod-sharding — row r lives on shard r % S at
+  local index r // S; each shard looks up the rows it owns, masks the
+  rest, and one psum over the embedding axis combines. Deterministic
+  collective footprint: one [B, D] psum per lookup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.graphs import segment_ops as sops
+
+
+def init_table(key, n_rows: int, dim: int, scale: float = 0.01):
+    p = {"table": jax.random.normal(key, (n_rows, dim), jnp.float32) * scale}
+    return p, {"table": ("table_rows", "table_dim")}
+
+
+def lookup(table, ids):
+    """Replicated/GSPMD lookup: [..] int32 -> [.., D]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def lookup_mod_sharded(table, ids, mesh, axis: str = "model"):
+    """Explicit mod-sharded lookup via shard_map (table sharded on rows)."""
+    from jax import shard_map
+    n_shards = mesh.shape[axis]
+
+    def local_lookup(tbl_local, ids_rep):
+        shard = jax.lax.axis_index(axis)
+        owner = ids_rep % n_shards
+        local_idx = ids_rep // n_shards
+        vals = jnp.take(tbl_local, local_idx, axis=0)
+        vals = jnp.where((owner == shard)[..., None], vals, 0.0)
+        return jax.lax.psum(vals, axis)
+
+    spec_tbl = P(axis, None)
+    return shard_map(local_lookup, mesh=mesh, in_specs=(spec_tbl, P()),
+                     out_specs=P(), check_vma=False,
+                     axis_names=frozenset({axis}))(table, ids)
+
+
+def embedding_bag(table, ids, segment_ids, n_bags: int, mode: str = "sum"):
+    """Multi-hot bag: ids int32[nnz], segment_ids int32[nnz] -> [n_bags, D].
+    Sentinel-padded nnz entries must carry segment_id == n_bags."""
+    vals = jnp.take(table, ids, axis=0)
+    if mode == "sum":
+        return sops.segment_sum(vals, segment_ids, n_bags + 1)[:n_bags]
+    if mode == "mean":
+        return sops.segment_mean(vals, segment_ids, n_bags + 1)[:n_bags]
+    out = sops.segment_max(vals, segment_ids, n_bags + 1)[:n_bags]
+    return jnp.where(jnp.isfinite(out), out, 0.0)

@@ -1,0 +1,165 @@
+"""GNN zoo: GCN (spectral), GraphSAGE (sampled mean-agg), EGNN (E(n)-
+equivariant). All message passing is ``gather -> elementwise ->
+segment_sum/mean`` over explicit edge indices — JAX has no sparse SpMM,
+so the segment formulation IS the kernel (see kernel_taxonomy §GNN).
+
+Edge conventions match repro.graphs.csr: sentinel-padded fixed shapes;
+padding edges point at row ``n`` which is sliced away after aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import segment_ops as sops
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------------- GCN
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_classes: int
+    norm: str = "sym"
+
+
+def init_gcn(key, cfg: GCNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, len(dims) - 1)
+    p, a = {}, {}
+    for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"w{i}"] = L._dense_init(keys[i], (di, do))
+        a[f"w{i}"] = ("gnn_in", "gnn_hidden")
+    return p, a
+
+
+def gcn_forward(p, cfg: GCNConfig, x, edge_src, edge_dst, deg):
+    """x: [n+1, d_in] (sentinel row 0s); edges sentinel-padded to n.
+    deg: [n+1] degrees (>=1). Symmetric normalization D^-1/2 A D^-1/2."""
+    n1 = x.shape[0]
+    inv_sqrt = jax.lax.rsqrt(jnp.maximum(deg.astype(jnp.float32), 1.0))
+    for i in range(cfg.n_layers):
+        h = x @ p[f"w{i}"]
+        msg = h[edge_src] * inv_sqrt[edge_src][:, None]
+        agg = sops.segment_sum(msg, edge_dst, n1)
+        x = agg * inv_sqrt[:, None]
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# --------------------------------------------------------------- GraphSAGE
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_classes: int
+    aggregator: str = "mean"
+    fanouts: tuple = (25, 10)
+
+
+def init_sage(key, cfg: SAGEConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    p, a = {}, {}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+        # W_self and W_neigh (concat formulation)
+        p[f"self{i}"] = L._dense_init(keys[i], (di, do))
+        p[f"nbr{i}"] = L._dense_init(jax.random.fold_in(keys[i], 1), (di, do))
+        a[f"self{i}"] = ("gnn_in", "gnn_hidden")
+        a[f"nbr{i}"] = ("gnn_in", "gnn_hidden")
+    return p, a
+
+
+def sage_layer(p, i, x_src, x_dst, edge_src, edge_dst, n_dst1, aggregator):
+    msg = x_src[edge_src]
+    if aggregator == "mean":
+        agg = sops.segment_mean(msg, edge_dst, n_dst1)
+    else:
+        agg = sops.segment_max(msg, edge_dst, n_dst1)
+        agg = jnp.where(jnp.isfinite(agg), agg, 0.0)
+    return x_dst @ p[f"self{i}"] + agg @ p[f"nbr{i}"]
+
+
+def sage_forward_full(p, cfg: SAGEConfig, x, edge_src, edge_dst):
+    """Full-graph SAGE (ogb_products-style full-batch)."""
+    n1 = x.shape[0]
+    for i in range(cfg.n_layers):
+        x = sage_layer(p, i, x, x, edge_src, edge_dst, n1, cfg.aggregator)
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def sage_forward_blocks(p, cfg: SAGEConfig, x_outer, blocks):
+    """Minibatch SAGE over sampler blocks (outermost first). ``blocks`` is
+    a list of dicts with edge_src/edge_dst (local) + n_dst +
+    map_dst: index of each dst node within the src node set."""
+    x = x_outer
+    for i, blk in enumerate(blocks):
+        x_pad = jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], 0)
+        sentinel = jnp.asarray([x_pad.shape[0] - 1], jnp.int32)
+        map_dst = jnp.concatenate([blk["map_dst"].astype(jnp.int32),
+                                   sentinel])       # row for the pad segment
+        x_dst = x_pad[jnp.minimum(map_dst, x_pad.shape[0] - 1)]
+        x = sage_layer(p, i, x_pad, x_dst, blk["edge_src"], blk["edge_dst"],
+                       blk["n_dst"] + 1, cfg.aggregator)[: blk["n_dst"]]
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# -------------------------------------------------------------------- EGNN
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_out: int = 1
+
+
+def init_egnn(key, cfg: EGNNConfig):
+    p, a = {}, {}
+    k0, key = jax.random.split(key)
+    p["embed"] = L._dense_init(k0, (cfg.d_in, cfg.d_hidden))
+    a["embed"] = ("gnn_in", "gnn_hidden")
+    h = cfg.d_hidden
+    for i in range(cfg.n_layers):
+        ke, kx, kh, key = jax.random.split(key, 4)
+        p[f"phi_e{i}"], a[f"phi_e{i}"] = L.init_mlp(ke, [2 * h + 1, h, h])
+        p[f"phi_x{i}"], a[f"phi_x{i}"] = L.init_mlp(kx, [h, h, 1])
+        p[f"phi_h{i}"], a[f"phi_h{i}"] = L.init_mlp(kh, [2 * h, h, h])
+    ko, _ = jax.random.split(key)
+    p["out"], a["out"] = L.init_mlp(ko, [h, h, cfg.n_out])
+    return p, a
+
+
+def egnn_forward(p, cfg: EGNNConfig, h_feat, coords, edge_src, edge_dst):
+    """h_feat: [n+1, d_in]; coords: [n+1, 3]; edges sentinel-padded.
+    Returns (node_out [n+1, n_out], node feats h) — callers pool for
+    graph-level targets (segment_sum over graph_ids)."""
+    n1 = h_feat.shape[0]
+    h = h_feat @ p["embed"]
+    x = coords
+    act = jax.nn.silu
+    for i in range(cfg.n_layers):
+        diff = x[edge_src] - x[edge_dst]
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = L.mlp(p[f"phi_e{i}"], jnp.concatenate(
+            [h[edge_src], h[edge_dst], d2], -1), act=act)
+        # coordinate update (E(n)-equivariant)
+        cx = L.mlp(p[f"phi_x{i}"], m, act=act)
+        x = x + sops.segment_mean(diff * cx, edge_dst, n1)
+        # feature update
+        agg = sops.segment_sum(m, edge_dst, n1)
+        h = h + L.mlp(p[f"phi_h{i}"], jnp.concatenate([h, agg], -1), act=act)
+    node_out = L.mlp(p["out"], h, act=act)
+    return node_out, h

@@ -1,0 +1,137 @@
+"""Shared neural net layers (pure-jnp, param dicts + logical-axis trees).
+
+Every ``init_*`` returns ``(params, axes)`` where ``axes`` mirrors the
+param tree with tuples of *logical* axis names; distributed/sharding.py
+maps logical names -> mesh axes per model family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, shape, in_axis=-2):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in))
+
+
+def init_linear(key, d_in, d_out, axes=("embed", "mlp"), bias=False):
+    kw, kb = jax.random.split(key)
+    p = {"w": _dense_init(kw, (d_in, d_out))}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+        a["b"] = (axes[1],)
+    return p, a
+
+
+def linear(p, x, dtype=None):
+    w = p["w"] if dtype is None else p["w"].astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + (p["b"] if dtype is None else p["b"].astype(dtype))
+    return y
+
+
+def init_rmsnorm(d, axis="embed"):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": (axis,)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+def init_layernorm(d, axis="embed"):
+    return ({"scale": jnp.ones((d,), jnp.float32),
+             "bias": jnp.zeros((d,), jnp.float32)},
+            {"scale": (axis,), "bias": (axis,)})
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def init_swiglu(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_gate": _dense_init(k1, (d_model, d_ff)),
+         "w_up": _dense_init(k2, (d_model, d_ff)),
+         "w_down": _dense_init(k3, (d_ff, d_model))}
+    a = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+         "w_down": ("mlp", "embed")}
+    return p, a
+
+
+def swiglu(p, x, dtype=jnp.bfloat16):
+    g = x @ p["w_gate"].astype(dtype)
+    u = x @ p["w_up"].astype(dtype)
+    return (jax.nn.silu(g) * u) @ p["w_down"].astype(dtype)
+
+
+def init_mlp(key, dims, axes_prefix="mlp", bias=True, final_bias=True):
+    """Plain MLP tower (recsys heads, GNN blocks)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    p, a = {}, {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        use_b = bias if i < len(dims) - 2 else final_bias
+        p[f"l{i}"], a[f"l{i}"] = init_linear(
+            keys[i], din, dout, axes=(f"{axes_prefix}_in", f"{axes_prefix}_out"),
+            bias=use_b)
+    return p, a
+
+
+def mlp(p, x, act=jax.nn.relu, dtype=None):
+    n = len(p)
+    for i in range(n):
+        x = linear(p[f"l{i}"], x, dtype)
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, Dh]; positions: broadcastable [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(ang)[..., None, :]                  # [..., S, 1, Dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0,
+                          impl: str = "gather"):
+    """logits [..., V] f32; labels int32 [...]. Returns per-token loss.
+
+    impl="gather": take_along_axis — simple, but under vocab (TP)
+    sharding GSPMD all-gathers the full logits to serve the gather.
+    impl="iota": select the label logit with an elementwise
+    iota-compare + sum — partitions cleanly along the sharded vocab dim
+    (no all-gather; one scalar psum). Same math.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    if impl == "iota":
+        v = logits.shape[-1]
+        onehot = labels[..., None] == jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    else:
+        ll = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity
+dispatch (GShard/Switch-style) + optional shared experts
+(DeepSeekMoE/Qwen-MoE/Kimi style).
+
+Dispatch is fixed-shape: token-expert assignments are sorted by expert,
+ranked within expert, and scattered into an [n_exp * capacity, E]
+buffer; overflow beyond the capacity factor is dropped (standard). The
+expert dim is the EP sharding axis; GSPMD turns the scatter/gather into
+all-to-all when tokens are batch-sharded and experts model-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    n_shared: int = 0
+    d_shared_ff: int = 0          # 0 -> n_shared * d_expert_ff
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    dispatch_shard: bool = False   # constrain dispatch buffers:
+                                   # experts->model, capacity->dp
+    ep_pad: int = 0                # pad expert count (e.g. 60->64) so EP
+                                   # divides the model axis; padded experts
+                                   # get no routed tokens
+    combine_impl: str = "gather"   # "scatter": segment-sum combine avoids
+                                   # materializing the [T, k, E] gather-back
+
+    @property
+    def n_total(self) -> int:
+        return max(self.ep_pad, self.n_experts)
+
+
+_DISPATCH_MESH = [None]      # set by steps.py when dispatch_shard is on
+
+
+def set_dispatch_mesh(mesh):
+    _DISPATCH_MESH[0] = mesh
+
+
+def _constrain_dispatch(xe):
+    """[n_exp, cap, E] dispatch buffer: experts -> model axis, capacity ->
+    dp axes. Keeps expert GEMMs expert-parallel and turns the global
+    gather into mostly-local traffic + an all-to-all."""
+    mesh = _DISPATCH_MESH[0]
+    if mesh is None:
+        return xe
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    ex = "model" if xe.shape[0] % mesh.shape["model"] == 0 else None
+    return jax.lax.with_sharding_constraint(
+        xe, NamedSharding(mesh, P(ex, dp, None)))
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig):
+    kr, ke, ks = jax.random.split(key, 3)
+    n, f = cfg.n_total, cfg.d_expert_ff
+    p = {
+        "router": L._dense_init(kr, (d_model, cfg.n_experts)),
+        "w_gate": L._dense_init(ke, (n, d_model, f)),
+        "w_up": L._dense_init(jax.random.fold_in(ke, 1), (n, d_model, f)),
+        "w_down": L._dense_init(jax.random.fold_in(ke, 2), (n, f, d_model)),
+    }
+    a = {
+        "router": ("embed", "experts_router"),
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.n_shared:
+        dsf = cfg.d_shared_ff or cfg.n_shared * cfg.d_expert_ff
+        p["shared"], a["shared"] = L.init_swiglu(ks, d_model, dsf)
+    return p, a
+
+
+def moe_ffn(p, cfg: MoEConfig, x, *, dtype=jnp.bfloat16):
+    """x: [B, S, E] -> ([B, S, E], aux_loss)."""
+    b, s, e = x.shape
+    t = b * s
+    xf = x.reshape(t, e)
+    logits = (xf @ p["router"].astype(dtype)).astype(jnp.float32)  # [T, N]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, top_i = jax.lax.top_k(probs, cfg.top_k)                # [T, K]
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    n, k = cfg.n_total, cfg.top_k
+    cap = int(cfg.capacity_factor * k * t / cfg.n_experts + 1)
+
+    flat_e = top_i.reshape(-1)                                     # [T*K]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(t * k, dtype=jnp.int32)
+    first = jax.ops.segment_min(idx, sorted_e, num_segments=n)  # n_total segs
+    rank = idx - first[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, n * cap)         # drop row
+    token_of = order // k
+
+    buf = jnp.zeros((n * cap + 1, e), dtype)
+    buf = buf.at[slot].set(xf[token_of].astype(dtype), mode="drop")
+    xe = buf[:-1].reshape(n, cap, e)
+    if cfg.dispatch_shard:
+        xe = _constrain_dispatch(xe)
+
+    g = jnp.einsum(" nce,nef->ncf", xe, p["w_gate"].astype(dtype))
+    u = jnp.einsum("nce,nef->ncf", xe, p["w_up"].astype(dtype))
+    he = jnp.einsum("ncf,nfe->nce", jax.nn.silu(g) * u,
+                    p["w_down"].astype(dtype))
+    he_flat = jnp.concatenate([he.reshape(n * cap, e),
+                               jnp.zeros((1, e), dtype)], 0)
+
+    if cfg.combine_impl == "scatter":
+        # combine by scattering buffer rows to their tokens: no [T, k, E]
+        # intermediate — each buffer row knows its token and gate weight
+        gate_sorted = gate_v.reshape(-1)[order]                 # [T*K]
+        tok_slot = jnp.full((n * cap + 1,), t, jnp.int32).at[slot].set(
+            token_of.astype(jnp.int32), mode="drop")
+        gate_slot = jnp.zeros((n * cap + 1,), jnp.float32).at[slot].set(
+            gate_sorted, mode="drop")
+        weighted = he_flat * gate_slot[:, None].astype(dtype)
+        y = jax.ops.segment_sum(weighted, tok_slot, num_segments=t + 1)[:t]
+    else:
+        # gather back: contribution of assignment (t, k) lives at `slot`
+        slot_by_assign = jnp.zeros((t * k,), jnp.int32).at[order].set(
+            jnp.where(keep, slot, n * cap).astype(jnp.int32))
+        contrib = he_flat[slot_by_assign].reshape(t, k, e)
+        y = jnp.sum(contrib * gate_v[..., None].astype(dtype), axis=1)
+
+    if cfg.n_shared:
+        y = y + L.swiglu(p["shared"], xf.astype(dtype), dtype)
+
+    # Switch-style load-balance auxiliary loss (over REAL experts)
+    me = jnp.mean(probs, axis=0)                                   # [N]
+    ce = jnp.mean(jax.nn.one_hot(top_i[:, 0], cfg.n_experts), axis=0)
+    aux = cfg.router_aux_weight * cfg.n_experts * jnp.sum(me * ce)
+    return y.reshape(b, s, e), aux

@@ -1,0 +1,68 @@
+"""Adafactor (Shazeer & Stern, arXiv:1804.04235) — factored second
+moments. The memory-feasible optimizer for the 1T-param kimi-k2 cells:
+for an [a, b] matrix the state is a+b floats instead of a*b (plus no
+first moment), ~2 bytes/param total vs AdamW's 8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer, clip_by_global_norm, global_norm
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_norm=1.0,
+              weight_decay=0.0, schedule=None) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr if schedule is None else schedule(step) * lr
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                prec = jax.lax.rsqrt(
+                    jnp.maximum(rfac[..., None] * vc[..., None, :], eps))
+                u = g * prec
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                news = {"v": v}
+            # update-norm clipping (Adafactor's d=1.0 rule, simplified)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            newp = p - lr_t * (u + weight_decay * p).astype(p.dtype)
+            return newp, news
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = tdef.unflatten([o[1] for o in outs])
+        return new_params, new_state, gnorm
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,60 @@
+"""AdamW with global-norm clipping. Optax-style (init/update) minimal
+implementation — state shards exactly like params (ZeRO: the sharding
+rules put optimizer state on the same mesh axes as the weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable      # (grads, state, params, step) -> (updates, state)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw(lr=1e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm=1.0, schedule=None) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "nu": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params, step):
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr if schedule is None else schedule(step) * lr
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state["nu"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            step_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return p - lr_t * (step_ + weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu}, gnorm
+
+    return Optimizer(init=init, update=update)

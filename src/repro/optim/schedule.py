@@ -1,0 +1,19 @@
+"""LR schedules (multiplier-valued: pass as Optimizer(schedule=...))."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, min_ratio=0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return fn
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)

@@ -1,0 +1,123 @@
+"""Structural invariants of the vertex hierarchy (paper Definitions 1+4,
+Lemmas 1-3) + hypothesis property tests.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IndexConfig, build_hierarchy, ref
+from repro.core.labeling import build_labels
+from repro.graphs import generators as gen
+
+
+def _edge_sets_per_level(n, src, dst, w, cfg):
+    """Re-run peeling, keeping each level's graph for invariant checks."""
+    from repro.core.hierarchy import peel_level
+    import jax
+    from repro.graphs import csr as gcsr
+    e_cap = cfg.e_cap(len(src))
+    g = gcsr.from_host_edges(src, dst, w, n, e_cap)
+    return g
+
+
+def test_levels_partition_vertices():
+    n, src, dst, w = gen.er_graph(300, 3.0, seed=1)
+    cfg = IndexConfig()
+    h = build_hierarchy(n, src, dst, w, cfg)
+    assert h.level.min() >= 1 and h.level.max() == h.k
+    assert sum(h.level_sizes) + (h.level == h.k).sum() == n
+
+
+def test_independence_property():
+    """No edge of G_i connects two level-i vertices (vertex independence):
+    equivalently, no up-edge of v points to a same-level vertex."""
+    n, src, dst, w = gen.rmat_graph(9, avg_deg=6.0, seed=2)
+    h = build_hierarchy(n, src, dst, w, IndexConfig())
+    for v in range(n):
+        if h.level[v] == h.k:
+            continue
+        nbrs = h.up_ids[v][h.up_ids[v] < n]
+        assert (h.level[nbrs] > h.level[v]).all(), \
+            f"vertex {v} level {h.level[v]} has non-ascending up-edge"
+
+
+def test_up_edges_within_cap():
+    n, src, dst, w = gen.er_graph(400, 4.0, seed=3)
+    cfg = IndexConfig(d_cap=8)
+    h = build_hierarchy(n, src, dst, w, cfg)
+    assert h.up_ids.shape[1] == 8
+    deg = (h.up_ids[:n] < n).sum(1)
+    assert (deg[h.level < h.k] <= 8).all()
+
+
+def test_core_distance_preservation():
+    """Lemma 1/2: distances between core vertices in G_k equal distances
+    in G (the augmenting edges preserve them exactly)."""
+    n, src, dst, w = gen.er_graph(200, 3.0, seed=4)
+    h = build_hierarchy(n, src, dst, w, IndexConfig())
+    core = np.flatnonzero(h.level == h.k)
+    if len(core) < 2 or len(h.core_src) == 0:
+        pytest.skip("graph fully peeled")
+    # distances in G_k (its own edge list)
+    pos = {int(v): i for i, v in enumerate(core)}
+    ls = np.asarray([pos[int(x)] for x in h.core_src])
+    ld = np.asarray([pos[int(x)] for x in h.core_dst])
+    sub = ref.dijkstra_oracle(len(core), ls, ld, h.core_w,
+                              np.arange(min(20, len(core))))
+    full = ref.dijkstra_oracle(n, src, dst, w, core[:20])
+    for i in range(min(20, len(core))):
+        want = full[i][core]
+        got = sub[i]
+        fin = np.isfinite(want)
+        np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5)
+        assert (np.isfinite(got) == fin).all()
+
+
+def test_label_ancestor_distances_are_upper_bounds():
+    """Def. 3: label distances are upper bounds on true distances."""
+    n, src, dst, w = gen.er_graph(150, 3.0, seed=5)
+    cfg = IndexConfig(l_cap=256, label_chunk=64)
+    h = build_hierarchy(n, src, dst, w, cfg)
+    ids, d, _ = build_labels(h, cfg)
+    ids = np.asarray(ids)[:n]
+    d = np.asarray(d)[:n]
+    oracle = ref.dijkstra_oracle(n, src, dst, w, np.arange(n))
+    for v in range(0, n, 7):
+        row = ids[v]
+        ok = row < n
+        assert (d[v][ok] >= oracle[v][row[ok]] - 1e-4).all()
+        # self entry present with d=0
+        j = np.searchsorted(row, v)
+        assert row[j] == v and d[v][j] == 0.0
+
+
+def test_label_rows_sorted_unique():
+    n, src, dst, w = gen.rmat_graph(8, avg_deg=5.0, seed=6)
+    cfg = IndexConfig(l_cap=256, label_chunk=128)
+    h = build_hierarchy(n, src, dst, w, cfg)
+    ids, _, _ = build_labels(h, cfg)
+    ids = np.asarray(ids)[:n]
+    for v in range(0, n, 11):
+        row = ids[v][ids[v] < n]
+        assert (np.diff(row) > 0).all(), "label row not sorted/unique"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), deg=st.floats(1.0, 5.0))
+def test_property_hierarchy_invariants(seed, deg):
+    n, src, dst, w = gen.er_graph(80, avg_deg=deg, seed=seed)
+    h = build_hierarchy(n, src, dst, w, IndexConfig(d_cap=8))
+    # partition + ascending levels along up-edges
+    assert sum(h.level_sizes) + (h.level == h.k).sum() == n
+    for v in range(n):
+        if h.level[v] < h.k:
+            nbrs = h.up_ids[v][h.up_ids[v] < n]
+            assert (h.level[nbrs] > h.level[v]).all()
+
+
+def test_overflow_detection():
+    n, src, dst, w = gen.caveman_graph(6, 10, seed=7)
+    with pytest.raises(RuntimeError, match="label capacity|edge capacity"):
+        cfg = IndexConfig(l_cap=2, label_chunk=32)
+        h = build_hierarchy(n, src, dst, w, cfg)
+        build_labels(h, cfg)

@@ -1,0 +1,97 @@
+"""Paper §8: shortest-path reconstruction, update maintenance, and the
+index save/load roundtrip."""
+import numpy as np
+import pytest
+
+from repro.core import ISLabelIndex, IndexConfig, ref
+from repro.graphs import generators as gen
+
+
+@pytest.fixture(scope="module")
+def built():
+    n, src, dst, w = gen.rmat_graph(8, avg_deg=5.0, seed=2)
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=256, label_chunk=128))
+    ed = {}
+    for a, b, ww in zip(src, dst, w):
+        ed[(int(a), int(b))] = min(ed.get((int(a), int(b)), np.inf),
+                                   float(ww))
+    return n, src, dst, w, idx, ed
+
+
+def test_paths_valid_and_tight(built):
+    n, src, dst, w, idx, ed = built
+    r = np.random.default_rng(3)
+    checked = 0
+    for _ in range(40):
+        s, t = int(r.integers(0, n)), int(r.integers(0, n))
+        d, path = idx.shortest_path(s, t)
+        if not np.isfinite(d):
+            assert path == []
+            continue
+        checked += 1
+        assert path[0] == s and path[-1] == t
+        length = 0.0
+        for a, b in zip(path[:-1], path[1:]):
+            assert (a, b) in ed, f"path uses non-edge {(a, b)}"
+            length += ed[(a, b)]
+        assert abs(length - d) < 1e-4, (length, d)
+    assert checked > 10
+
+
+def test_save_load_roundtrip(tmp_path, built):
+    n, src, dst, w, idx, _ = built
+    idx.save(tmp_path / "idx")
+    idx2 = ISLabelIndex.load(tmp_path / "idx")
+    r = np.random.default_rng(5)
+    s = r.integers(0, n, 50).astype(np.int32)
+    t = r.integers(0, n, 50).astype(np.int32)
+    np.testing.assert_allclose(idx.query_host(s, t), idx2.query_host(s, t))
+    assert idx2.k == idx.k and idx2.stats.m == idx.stats.m
+
+
+def test_insert_vertex():
+    """§8.3: lazy insert keeps queries exact wrt the updated graph."""
+    n, src, dst, w = gen.er_graph(120, 3.0, seed=9)
+    # hold out the last vertex: build on edges not touching u
+    u = n - 1
+    keep = (src != u) & (dst != u)
+    idx = ISLabelIndex.build(n, src[keep], dst[keep], w[keep],
+                             IndexConfig(l_cap=256, label_chunk=64))
+    nbrs = dst[(src == u)]
+    ws = w[(src == u)]
+    if len(nbrs) == 0:
+        pytest.skip("isolated holdout")
+    idx.insert_vertex(u, nbrs.tolist(), ws.tolist())
+    r = np.random.default_rng(11)
+    s = np.full(30, u, np.int32)
+    t = r.integers(0, n, 30).astype(np.int32)
+    got = idx.query_host(s, t)
+    want = ref.dijkstra_oracle(n, src, dst, w, [u])[0][t]
+    fin = np.isfinite(want)
+    assert (np.isfinite(got) == fin).all()
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5)
+
+
+def test_delete_vertex():
+    """§8.3: lazy delete — distances never report paths through u."""
+    n, src, dst, w = gen.grid_graph(8, seed=13)     # deletion splits paths
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=256, label_chunk=64))
+    u = 27
+    idx.delete_vertex(u)
+    keep = (src != u) & (dst != u)
+    r = np.random.default_rng(13)
+    s = r.integers(0, n, 40).astype(np.int32)
+    t = r.integers(0, n, 40).astype(np.int32)
+    mask = (s != u) & (t != u)
+    got = idx.query_host(s[mask], t[mask])
+    want = ref.dijkstra_oracle(n, src[keep], dst[keep], w[keep],
+                               s[mask])[np.arange(mask.sum()), t[mask]]
+    # lazy deletion is conservative: answers must never be SHORTER than
+    # the truth (never route through the deleted vertex) and must match
+    # wherever the remaining label/core structure covers the pair.
+    fin = np.isfinite(got)
+    assert (got[fin] >= want[fin] - 1e-4).all()
+    cover = fin & np.isfinite(want)
+    assert (np.abs(got[cover] - want[cover]) < 1e-4).mean() > 0.8

@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests for the paper's system: build -> serve ->
+maintain, mirroring the paper's workflow (Table 3 build, Table 4 query
+serving, §8 maintenance) at CPU scale."""
+import numpy as np
+
+from repro.core import ISLabelIndex, IndexConfig, ref
+from repro.graphs import generators as gen
+
+
+def test_end_to_end_paper_workflow(tmp_path):
+    # 1. build (Table 3 regime: power-law graph)
+    n, src, dst, w = gen.rmat_graph(10, avg_deg=6.0, seed=42)
+    cfg = IndexConfig(sigma=0.95, l_cap=512, label_chunk=512)
+    idx = ISLabelIndex.build(n, src, dst, w, cfg)
+    st = idx.stats
+    assert st.k >= 2 and st.n_core < n
+    assert st.label_entries > 0
+    # the hierarchy shrank the graph (the point of the paper)
+    assert st.graph_sizes[-1] < st.graph_sizes[0]
+
+    # 2. serve a 1000-query batch (Table 4 regime), validate vs oracle
+    r = np.random.default_rng(0)
+    s = r.integers(0, n, 1000).astype(np.int32)
+    t = r.integers(0, n, 1000).astype(np.int32)
+    got = idx.query_host(s, t)
+    want = ref.dijkstra_oracle(n, src, dst, w, s[:100])[
+        np.arange(100), t[:100]]
+    fin = np.isfinite(want)
+    assert (np.isfinite(got[:100]) == fin).all()
+    np.testing.assert_allclose(got[:100][fin], want[fin], rtol=1e-5)
+
+    # 3. type breakdown exists (Table 5 regime)
+    types = idx.query_types(s, t)
+    assert len(types) == 1000
+
+    # 4. persist + reload serves identically
+    idx.save(tmp_path / "ix")
+    idx2 = ISLabelIndex.load(tmp_path / "ix")
+    np.testing.assert_allclose(idx2.query_host(s[:50], t[:50]), got[:50])
+
+    # 5. maintenance: attach an isolated vertex and query through it
+    deg = np.zeros(n, np.int64)
+    np.add.at(deg, src, 1)
+    isolated = np.flatnonzero(deg == 0)
+    if len(isolated):
+        u = int(isolated[0])
+        v0 = int(s[0])
+        idx2.insert_vertex(u, [v0], [2.0])
+        d = float(idx2.query_host([u], [u])[0])
+        assert d == 0.0
+        d2 = float(idx2.query_host([u], [v0])[0])
+        assert abs(d2 - 2.0) < 1e-5
+
+
+def test_serving_engine_batch_sizes():
+    """Query engine handles varying batch sizes and returns consistent
+    answers across batch splits."""
+    n, src, dst, w = gen.er_graph(500, 3.0, seed=9)
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=256, label_chunk=256))
+    r = np.random.default_rng(1)
+    s = r.integers(0, n, 64).astype(np.int32)
+    t = r.integers(0, n, 64).astype(np.int32)
+    full = idx.query_host(s, t)
+    for bs in (1, 7, 32):
+        part = idx.query_host(s[:bs], t[:bs])
+        np.testing.assert_allclose(part, full[:bs])
+
+
+def test_build_determinism():
+    n, src, dst, w = gen.er_graph(200, 3.0, seed=3)
+    cfg = IndexConfig(l_cap=256, label_chunk=128, seed=5)
+    a = ISLabelIndex.build(n, src, dst, w, cfg)
+    b = ISLabelIndex.build(n, src, dst, w, cfg)
+    assert a.k == b.k
+    np.testing.assert_array_equal(a.level, b.level)
+    np.testing.assert_array_equal(np.asarray(a.lbl_ids),
+                                  np.asarray(b.lbl_ids))
