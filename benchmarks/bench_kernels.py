@@ -1,7 +1,9 @@
-"""Kernel microbenchmarks: the jnp reference paths (the CPU-measurable
-proxies) at serving shapes + interpret-mode parity checks. On TPU the
-pallas_call paths replace the refs; CPU timings here track the *jnp*
-implementations the engine actually runs on this container."""
+"""Kernel microbenchmarks: dispatch (Pallas kernel) vs jnp-reference
+paths side by side at serving shapes, with parity asserted between them.
+On TPU the kernel rows measure compiled pallas_call; off-TPU they run
+interpret mode (same program, jnp evaluation) so the comparison is about
+correctness there, while the reference rows track what ``auto`` dispatch
+actually serves on this container."""
 from __future__ import annotations
 
 import jax
@@ -10,40 +12,71 @@ import numpy as np
 
 from benchmarks.common import row, timeit
 from repro.core.query import label_intersect_mu
-from repro.kernels.label_intersect.ref import label_intersect_ref
+from repro.kernels.backend import resolve_backend
+from repro.kernels.label_intersect.ops import label_intersect
+from repro.kernels.minplus_matmul.ops import minplus_matmul
 from repro.kernels.minplus_matmul.ref import minplus_matmul_ref
-from repro.kernels.spmv_relax.ops import coo_to_ell
+from repro.kernels.spmv_relax.ops import coo_to_ell, spmv_relax
 from repro.kernels.spmv_relax.ref import spmv_relax_ref
 
 
 def main(full: bool = False):
     r = np.random.default_rng(0)
-    # label intersection at serving shape
+    kernel_backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    print(f"# auto dispatch resolves to: {resolve_backend(None)}; "
+          f"kernel rows use backend={kernel_backend}")
+
+    # label intersection at serving shape: engine / reference / kernel.
+    # Ids must be unique per row (real label rows are): on duplicates the
+    # searchsorted reference keeps only the first occurrence while the
+    # equality-join kernel min-reduces over all, so μ would differ.
     q, l, n = (4096, 64, 1 << 20) if full else (512, 64, 1 << 16)
-    ids_s = np.sort(r.integers(0, n, (q, l)).astype(np.int32), 1)
-    ids_t = np.sort(r.integers(0, n, (q, l)).astype(np.int32), 1)
+
+    def _rows():
+        return np.sort(np.stack([r.choice(n, l, replace=False)
+                                 for _ in range(q)]), 1).astype(np.int32)
+
+    ids_s = _rows()
+    ids_t = _rows()
     d_s = r.random((q, l)).astype(np.float32)
     d_t = r.random((q, l)).astype(np.float32)
+    args = (jnp.asarray(ids_s), jnp.asarray(d_s),
+            jnp.asarray(ids_t), jnp.asarray(d_t))
     f = jax.jit(lambda a, b, c, d: label_intersect_mu(a, b, c, d, n, l))
-    us, _ = timeit(f, jnp.asarray(ids_s), jnp.asarray(d_s),
-                   jnp.asarray(ids_t), jnp.asarray(d_t))
+    us, _ = timeit(f, *args)
     row("kernels", f"label_intersect_engine[{q}x{l}]", us / q * 1e6,
         total_ms=round(us * 1e3, 3))
-    g = jax.jit(lambda a, b, c, d: label_intersect_ref(a, b, c, d, n))
-    us2, _ = timeit(g, jnp.asarray(ids_s), jnp.asarray(d_s),
-                    jnp.asarray(ids_t), jnp.asarray(d_t))
-    row("kernels", f"label_intersect_ref[{q}x{l}]", us2 / q * 1e6)
+    g = jax.jit(lambda a, b, c, d: label_intersect(a, b, c, d, n,
+                                                   backend="reference"))
+    us_ref, mu_ref = timeit(g, *args)
+    row("kernels", f"label_intersect_ref[{q}x{l}]", us_ref / q * 1e6)
+    h = jax.jit(lambda a, b, c, d: label_intersect(a, b, c, d, n,
+                                                   backend=kernel_backend))
+    us_ker, mu_ker = timeit(h, *args)
+    row("kernels", f"label_intersect_kernel[{q}x{l}]", us_ker / q * 1e6,
+        backend=kernel_backend,
+        speedup_vs_ref=round(us_ref / us_ker, 2))
+    a, b = np.asarray(mu_ref), np.asarray(mu_ker)
+    fin = np.isfinite(a)
+    assert (np.isfinite(b) == fin).all() and np.array_equal(a[fin], b[fin]), \
+        "label_intersect dispatch parity failed"
 
-    # minplus matmul (core-search building block)
+    # minplus matmul (core-search building block): reference vs kernel
     m = 512 if full else 256
-    a = (r.random((m, m)) * 9).astype(np.float32)
-    b = (r.random((m, m)) * 9).astype(np.float32)
+    a2 = (r.random((m, m)) * 9).astype(np.float32)
+    b2 = (r.random((m, m)) * 9).astype(np.float32)
     f = jax.jit(minplus_matmul_ref)
-    us, _ = timeit(f, jnp.asarray(a), jnp.asarray(b))
-    row("kernels", f"minplus_ref[{m}^3]", us * 1e6,
-        gflops=round(2 * m ** 3 / us / 1e9, 2))
+    us_ref, mp_ref = timeit(f, jnp.asarray(a2), jnp.asarray(b2))
+    row("kernels", f"minplus_ref[{m}^3]", us_ref * 1e6,
+        gflops=round(2 * m ** 3 / us_ref / 1e9, 2))
+    g = jax.jit(lambda x, y: minplus_matmul(x, y, backend=kernel_backend))
+    us_ker, mp_ker = timeit(g, jnp.asarray(a2), jnp.asarray(b2))
+    row("kernels", f"minplus_kernel[{m}^3]", us_ker * 1e6,
+        backend=kernel_backend, gflops=round(2 * m ** 3 / us_ker / 1e9, 2))
+    np.testing.assert_allclose(np.asarray(mp_ref), np.asarray(mp_ker),
+                               rtol=1e-6)
 
-    # relaxation round at core-graph shape
+    # relaxation round at core-graph shape: reference vs kernel
     v, e, qb = (1 << 15, 1 << 18, 256) if full else (1 << 12, 1 << 15, 64)
     src = r.integers(0, v, e)
     dst = r.integers(0, v, e)
@@ -52,9 +85,18 @@ def main(full: bool = False):
     dist = np.full((qb, v), np.inf, np.float32)
     dist[np.arange(qb), r.integers(0, v, qb)] = 0.0
     f = jax.jit(spmv_relax_ref)
-    us, _ = timeit(f, jnp.asarray(dist), ids, ws)
-    row("kernels", f"spmv_relax_ref[q{qb},v{v}]", us * 1e6,
-        edges_per_s=round(qb * e / us / 1e6, 1))
+    us_ref, rx_ref = timeit(f, jnp.asarray(dist), ids, ws)
+    row("kernels", f"spmv_relax_ref[q{qb},v{v}]", us_ref * 1e6,
+        edges_per_s=round(qb * e / us_ref / 1e6, 1))
+    g = jax.jit(lambda d, i, w_: spmv_relax(d, i, w_, backend=kernel_backend))
+    us_ker, rx_ker = timeit(g, jnp.asarray(dist), ids, ws)
+    row("kernels", f"spmv_relax_kernel[q{qb},v{v}]", us_ker * 1e6,
+        backend=kernel_backend,
+        edges_per_s=round(qb * e / us_ker / 1e6, 1))
+    a, b = np.asarray(rx_ref), np.asarray(rx_ker)
+    fin = np.isfinite(a)
+    assert (np.isfinite(b) == fin).all() and np.array_equal(a[fin], b[fin]), \
+        "spmv_relax dispatch parity failed"
 
 
 if __name__ == "__main__":

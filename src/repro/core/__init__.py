@@ -1,5 +1,6 @@
 # IS-LABEL: the paper's primary contribution, as a composable JAX module.
 from repro.core.config import IndexConfig, BuildStats
+from repro.core.dispatch import CoreRelaxer, label_intersect_dispatch
 from repro.core.index import ISLabelIndex
 from repro.core.query import QueryEngine, label_intersect_mu, core_relax
 from repro.core.hierarchy import build_hierarchy, Hierarchy

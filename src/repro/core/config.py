@@ -24,6 +24,10 @@ class IndexConfig:
     label_chunk: int = 4096    # vertices labeled per jitted chunk
     # -- query -------------------------------------------------------------
     max_relax_rounds: int = 0  # 0 = bound by n_core (exact Bellman-Ford)
+    query_backend: str = "auto"  # kernel dispatch: auto | pallas |
+                                 # interpret | reference (kernels/backend.py)
+    query_chunk: int = 0       # >0: tile query batches so the stage-2
+                               # frontier is [chunk, n_core+1], not [Q, ...]
     seed: int = 0
 
     def e_cap(self, n_edges: int) -> int:

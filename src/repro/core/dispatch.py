@@ -1,0 +1,160 @@
+"""Kernel dispatch layer for the query hot path.
+
+This module is the single seam between the paper-level query algebra
+(`repro.core.query`) and the hardware kernels (`repro.kernels.*`). Both
+stages of Algorithm 1 route through here:
+
+  stage 1 — Equation 1 label intersection:
+      ``label_intersect_dispatch`` -> ``kernels.label_intersect.ops``
+      (tiled equality-join Pallas kernel on TPU, interpret-mode parity
+      fallback off-TPU, searchsorted-merge jnp reference).
+
+  stage 2 — label-seeded bidirectional core relaxation:
+      ``CoreRelaxer`` — reference backend keeps the COO scatter-min
+      wavefront (``core_relax``, bit-identical to the pre-dispatch
+      engine); pallas/interpret backends run the ``spmv_relax`` ELL
+      min-plus kernel with both frontiers *stacked* into one [2Q, V]
+      launch so each round is a single kernel invocation.
+
+Every backend computes the same per-round fixed point (synchronous
+Bellman-Ford over G_k), so answers agree bitwise: each round takes a min
+over the identical multiset of candidate sums regardless of whether the
+edges are visited scatter-wise (COO) or gather-wise (ELL).
+
+Query chunking lives one level up (``QueryEngine.query``): the batch is
+tiled into fixed-size chunks so a 10k-query batch never materializes a
+dense ``[Q, n_core+1]`` frontier per direction in one launch — peak
+frontier memory is ``O(query_chunk * n_core)`` instead of
+``O(Q * n_core)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.backend import pallas_interpret, resolve_backend
+from repro.kernels.label_intersect import ops as li_ops
+from repro.kernels.spmv_relax.kernel import spmv_relax_kernel
+from repro.kernels.spmv_relax.ops import coo_to_ell
+
+
+@partial(jax.jit, static_argnames=("n_sentinel", "backend"))
+def label_intersect_dispatch(ids_s, d_s, ids_t, d_t, n_sentinel: int,
+                             backend: str):
+    """Equation 1 μ via the resolved kernel backend. Returns float32[Q]."""
+    return li_ops.label_intersect(ids_s, d_s, ids_t, d_t, n_sentinel,
+                                  backend=backend)
+
+
+@partial(jax.jit, static_argnames=("n_core", "max_rounds"))
+def core_relax(seed_s, seed_t, ce_src, ce_dst, ce_w, mu,
+               n_core: int, max_rounds: int):
+    """Reference bidirectional label-seeded relaxation on G_k (Alg. 1
+    stage 2) — COO scatter-min wavefront rounds.
+
+    seed_s/seed_t: [Q, n_core+1] initial distance vectors (+inf default,
+    label distances scattered in, sentinel column n_core).
+    Returns (ans [Q], ds, dt, rounds) with ans = min(μ, min_v ds+dt).
+    """
+    def body(state):
+        ds, dt, it, _ = state
+        cs = ds[:, ce_src] + ce_w[None, :]
+        ds2 = ds.at[:, ce_dst].min(cs)
+        ct = dt[:, ce_src] + ce_w[None, :]
+        dt2 = dt.at[:, ce_dst].min(ct)
+        improved = jnp.any(ds2 < ds) | jnp.any(dt2 < dt)
+        return ds2, dt2, it + 1, improved
+
+    def cond(state):
+        _, _, it, improved = state
+        return improved & (it < max_rounds)
+
+    ds, dt, rounds, _ = jax.lax.while_loop(
+        cond, body, (seed_s, seed_t, jnp.int32(0), jnp.bool_(True)))
+    # the sentinel column n_core parks non-core label entries — exclude it
+    through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
+    return jnp.minimum(mu, through_core), ds, dt, rounds
+
+
+@partial(jax.jit,
+         static_argnames=("n_core", "max_rounds", "interpret", "bq", "bv"))
+def _core_relax_ell(seed_s, seed_t, nbr_ids, nbr_w, mu, n_core: int,
+                    max_rounds: int, interpret: bool, bq: int, bv: int):
+    """Kernel-path relaxation: both frontiers stacked into one [2Q, Vp]
+    matrix, one ``spmv_relax`` launch per wavefront round."""
+    q, v = seed_s.shape
+    vp = nbr_ids.shape[0]                     # V padded to a bv multiple
+    rows = 2 * q
+    rp = -(-rows // bq) * bq
+    d0 = jnp.concatenate([seed_s, seed_t], axis=0)
+    d0 = jnp.pad(d0, ((0, rp - rows), (0, vp - v)), constant_values=jnp.inf)
+
+    def body(state):
+        d, it, _ = state
+        d2 = spmv_relax_kernel(d, nbr_ids, nbr_w, bq=bq, bv=bv,
+                               interpret=interpret)
+        return d2, it + 1, jnp.any(d2 < d)
+
+    def cond(state):
+        _, it, improved = state
+        return improved & (it < max_rounds)
+
+    d, rounds, _ = jax.lax.while_loop(
+        cond, body, (d0, jnp.int32(0), jnp.bool_(True)))
+    ds = d[:q, :v]
+    dt = d[q:rows, :v]
+    through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
+    return jnp.minimum(mu, through_core), ds, dt, rounds
+
+
+class CoreRelaxer:
+    """Backend-dispatched stage-2 relaxation over the local core graph.
+
+    Holds the COO edge arrays (local indices in [0, n_core), weights)
+    and lazily derives the ELL layout the ``spmv_relax`` kernel consumes
+    — built once per index on first kernel-path query, padded to a
+    lane-aligned vertex count so per-round launches need no reshaping.
+    """
+
+    def __init__(self, ce_src, ce_dst, ce_w, n_core: int, *,
+                 bq: int = 8, bv: int = 128, d_width: int = 16):
+        self.ce_src = ce_src
+        self.ce_dst = ce_dst
+        self.ce_w = ce_w
+        self.n_core = n_core
+        self.bq = bq
+        self.bv = bv
+        self.d_width = d_width
+        self._ell = None
+
+    def ell(self):
+        """(nbr_ids [Vp, D], nbr_w [Vp, D]) with Vp = n_core+1 rounded up
+        to a multiple of bv (sentinel column included, padding rows
+        edgeless)."""
+        if self._ell is None:
+            v = self.n_core + 1
+            vp = -(-v // self.bv) * self.bv
+            ids, ws = coo_to_ell(v, np.asarray(self.ce_src),
+                                 np.asarray(self.ce_dst),
+                                 np.asarray(self.ce_w),
+                                 d_width=self.d_width)
+            ids = jnp.pad(ids, ((0, vp - v), (0, 0)))
+            ws = jnp.pad(ws, ((0, vp - v), (0, 0)), constant_values=jnp.inf)
+            self._ell = (ids, ws)
+        return self._ell
+
+    def run(self, seed_s, seed_t, mu, max_rounds: int, backend=None):
+        """Relax to convergence. Returns (ans, ds, dt, rounds) with
+        ds/dt of shape [Q, n_core+1] (matching ``core_relax``)."""
+        backend = resolve_backend(backend)
+        if backend == "reference":
+            return core_relax(seed_s, seed_t, self.ce_src, self.ce_dst,
+                              self.ce_w, mu, self.n_core, max_rounds)
+        nbr_ids, nbr_w = self.ell()
+        ans, ds, dt, rounds = _core_relax_ell(
+            seed_s, seed_t, nbr_ids, nbr_w, mu, self.n_core, max_rounds,
+            pallas_interpret(backend), self.bq, self.bv)
+        return ans, ds, dt, rounds

@@ -70,7 +70,8 @@ class ISLabelIndex:
             lbl_ids, lbl_d, jnp.asarray(core_pos),
             (jnp.asarray(ce_src), jnp.asarray(ce_dst),
              jnp.asarray(hier.core_w, jnp.float32)),
-            n=n, n_core=n_core, max_rounds=cfg.max_relax_rounds)
+            n=n, n_core=n_core, max_rounds=cfg.max_relax_rounds,
+            backend=cfg.query_backend, query_chunk=cfg.query_chunk)
         ids_h = np.asarray(lbl_ids)
         entries = int((ids_h[:n] < n).sum())
         stats = BuildStats(
@@ -322,7 +323,8 @@ class ISLabelIndex:
             (jnp.asarray(core_pos[self.core_src]),
              jnp.asarray(core_pos[self.core_dst]),
              jnp.asarray(self.core_w, jnp.float32)),
-            n=self.n, n_core=n_core, max_rounds=self.cfg.max_relax_rounds)
+            n=self.n, n_core=n_core, max_rounds=self.cfg.max_relax_rounds,
+            backend=self.cfg.query_backend, query_chunk=self.cfg.query_chunk)
 
     # ------------------------------------------------------------------ io
     def save(self, path):

@@ -13,6 +13,13 @@ Priority queues do not vectorize; synchronous wavefront relaxation is
 the standard data-parallel SSSP formulation and serves thousands of
 queries per launch. μ still prunes: converged queries stop contributing
 improvements, and the final min with μ implements Line 19.
+
+Both stages execute through the kernel dispatch layer
+(``repro.core.dispatch``): stage 1 via the tiled-equality-join Pallas
+label-intersect kernel (jnp searchsorted reference off-TPU), stage 2 via
+the ELL min-plus ``spmv_relax`` kernel (COO scatter reference off-TPU).
+``query_chunk`` tiles large batches so the dense per-direction frontier
+is ``[chunk, n_core+1]``, never ``[Q, n_core+1]``.
 """
 from __future__ import annotations
 
@@ -21,13 +28,21 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import (CoreRelaxer, core_relax,
+                                 label_intersect_dispatch)
+from repro.kernels.backend import resolve_backend
+
+__all__ = ["QueryEngine", "label_intersect_mu", "core_relax"]
+
 
 @partial(jax.jit, static_argnames=("l_cap",))
 def label_intersect_mu(ids_s, d_s, ids_t, d_t, n: int, l_cap: int):
     """Equation 1 over sorted label rows: μ[q] = min_{w∈X} d(s,w)+d(w,t).
 
     Also returns the meeting ancestor (global id; n if none) — used for
-    path reconstruction and Type classification.
+    path reconstruction and Type classification. The serving hot path
+    goes through ``dispatch.label_intersect_dispatch`` instead (the
+    kernel returns μ only); this stays the oracle for paths/updates.
     """
     del l_cap
     pos = jax.vmap(jnp.searchsorted)(ids_t, ids_s)          # [Q, L]
@@ -41,40 +56,17 @@ def label_intersect_mu(ids_s, d_s, ids_t, d_t, n: int, l_cap: int):
     return mu, meet
 
 
-@partial(jax.jit, static_argnames=("n_core", "max_rounds"))
-def core_relax(seed_s, seed_t, ce_src, ce_dst, ce_w, mu,
-               n_core: int, max_rounds: int):
-    """Bidirectional label-seeded relaxation on G_k (Alg. 1 stage 2).
-
-    seed_s/seed_t: [Q, n_core+1] initial distance vectors (+inf default,
-    label distances scattered in, sentinel column n_core).
-    Returns (ans [Q], ds, dt) with ans = min(μ, min_v ds+dt).
-    """
-    def body(state):
-        ds, dt, it, _ = state
-        cs = ds[:, ce_src] + ce_w[None, :]
-        ds2 = ds.at[:, ce_dst].min(cs)
-        ct = dt[:, ce_src] + ce_w[None, :]
-        dt2 = dt.at[:, ce_dst].min(ct)
-        improved = jnp.any(ds2 < ds) | jnp.any(dt2 < dt)
-        return ds2, dt2, it + 1, improved
-
-    def cond(state):
-        _, _, it, improved = state
-        return improved & (it < max_rounds)
-
-    ds, dt, rounds, _ = jax.lax.while_loop(
-        cond, body, (seed_s, seed_t, jnp.int32(0), jnp.bool_(True)))
-    # the sentinel column n_core parks non-core label entries — exclude it
-    through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
-    return jnp.minimum(mu, through_core), ds, dt, rounds
-
-
 class QueryEngine:
-    """Holds the device-resident index state and compiled query fns."""
+    """Holds the device-resident index state and compiled query fns.
+
+    ``backend`` selects the kernel execution path ("auto" resolves to
+    Pallas on TPU, jnp reference elsewhere; see ``repro.kernels.backend``).
+    ``query_chunk`` > 0 tiles query batches into fixed-size chunks.
+    """
 
     def __init__(self, lbl_ids, lbl_d, core_pos, core_local_edges, n: int,
-                 n_core: int, max_rounds: int = 0):
+                 n_core: int, max_rounds: int = 0, backend: str = "auto",
+                 query_chunk: int = 0):
         self.lbl_ids = lbl_ids
         self.lbl_d = lbl_d
         self.core_pos = core_pos              # int32[n+1] -> [0..n_core]
@@ -83,6 +75,10 @@ class QueryEngine:
         self.n_core = n_core
         self.l_cap = lbl_ids.shape[1]
         self.max_rounds = max_rounds if max_rounds > 0 else max(n_core, 1)
+        self.backend = backend
+        self.query_chunk = query_chunk
+        self.relaxer = CoreRelaxer(self.ce_src, self.ce_dst, self.ce_w,
+                                   n_core) if n_core > 0 else None
         self._last_rounds = 0
 
     def _seed(self, ids, d):
@@ -92,31 +88,57 @@ class QueryEngine:
         ridx = jnp.broadcast_to(jnp.arange(q)[:, None], cpos.shape)
         return seed.at[ridx, cpos].min(jnp.where(ids < self.n, d, jnp.inf))
 
-    def query(self, s, t):
+    def _query_block(self, s, t, backend: str):
+        """One fixed-size block through both stages. Returns (ans,
+        rounds) with rounds a device scalar (None when there is no
+        core) — callers reduce it lazily so chunked batches never sync
+        to host between launches."""
+        ids_s, d_s = self.lbl_ids[s], self.lbl_d[s]
+        ids_t, d_t = self.lbl_ids[t], self.lbl_d[t]
+        mu = label_intersect_dispatch(ids_s, d_s, ids_t, d_t, self.n, backend)
+        if self.n_core == 0:
+            return mu, None
+        seed_s = self._seed(ids_s, d_s)
+        seed_t = self._seed(ids_t, d_t)
+        ans, _, _, rounds = self.relaxer.run(seed_s, seed_t, mu,
+                                             self.max_rounds, backend)
+        return ans, rounds
+
+    def query(self, s, t, backend: str | None = None,
+              query_chunk: int | None = None):
         """Batched distances. s, t: int32[Q] device/host arrays."""
         s = jnp.asarray(s, jnp.int32)
         t = jnp.asarray(t, jnp.int32)
-        ids_s, d_s = self.lbl_ids[s], self.lbl_d[s]
-        ids_t, d_t = self.lbl_ids[t], self.lbl_d[t]
-        mu, meet = label_intersect_mu(ids_s, d_s, ids_t, d_t, self.n, self.l_cap)
-        if self.n_core == 0:
-            return mu
-        seed_s = self._seed(ids_s, d_s)
-        seed_t = self._seed(ids_t, d_t)
-        ans, _, _, rounds = core_relax(seed_s, seed_t, self.ce_src, self.ce_dst,
-                                       self.ce_w, mu, self.n_core,
-                                       self.max_rounds)
-        self._last_rounds = int(rounds)
-        return ans
+        backend = resolve_backend(self.backend if backend is None else backend)
+        chunk = self.query_chunk if query_chunk is None else query_chunk
+        q = s.shape[0]
+        if chunk <= 0 or chunk >= q:
+            ans, rounds = self._query_block(s, t, backend)
+            self._last_rounds = 0 if rounds is None else int(rounds)
+            return ans
+        outs, rounds_all = [], []
+        for start in range(0, q, chunk):
+            size = min(chunk, q - start)
+            sb, tb = s[start:start + size], t[start:start + size]
+            if size < chunk:          # fixed shapes: no per-tail recompile
+                sb = jnp.pad(sb, (0, chunk - size), mode="edge")
+                tb = jnp.pad(tb, (0, chunk - size), mode="edge")
+            ans, rounds = self._query_block(sb, tb, backend)
+            outs.append(ans[:size])
+            if rounds is not None:
+                rounds_all.append(rounds)
+        out = jnp.concatenate(outs)
+        self._last_rounds = max((int(r) for r in rounds_all), default=0)
+        return out
 
-    def query_mu_only(self, s, t):
+    def query_mu_only(self, s, t, backend: str | None = None):
         """Equation-1-only answers (exact for §5.2 Type-1 queries)."""
         s = jnp.asarray(s, jnp.int32)
         t = jnp.asarray(t, jnp.int32)
-        mu, _ = label_intersect_mu(self.lbl_ids[s], self.lbl_d[s],
-                                   self.lbl_ids[t], self.lbl_d[t],
-                                   self.n, self.l_cap)
-        return mu
+        backend = resolve_backend(self.backend if backend is None else backend)
+        return label_intersect_dispatch(self.lbl_ids[s], self.lbl_d[s],
+                                        self.lbl_ids[t], self.lbl_d[t],
+                                        self.n, backend)
 
     def classify(self, s, t, level, k):
         """Paper Table 5 endpoint classes: 1 = both core, 2 = one core,

@@ -1,0 +1,53 @@
+"""Kernel backend resolution shared by every ``kernels/*/ops.py`` wrapper.
+
+Three execution backends, one policy point:
+
+  * ``"pallas"``    — compiled ``pallas_call`` (TPU; the production path).
+  * ``"interpret"`` — ``pallas_call(interpret=True)``: the same kernel
+    program evaluated with jnp ops. Bit-identical to ``"pallas"`` logic,
+    runs anywhere; used for off-TPU parity tests and debugging.
+  * ``"reference"`` — the pure-jnp oracle in ``kernels/*/ref.py``
+    (searchsorted merge, dense gather). Fastest off-TPU, and the
+    numerical baseline every kernel is validated against.
+
+``"auto"`` (the default) picks ``"pallas"`` on TPU and ``"reference"``
+elsewhere, so CPU containers never pay interpret-mode overhead unless a
+caller asks for it. The ``ISLABEL_BACKEND`` environment variable
+overrides ``"auto"`` globally (serving knob; no code change needed).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+BACKENDS = ("pallas", "interpret", "reference")
+ENV_VAR = "ISLABEL_BACKEND"
+
+
+def resolve_backend(backend: str | None = None,
+                    interpret: bool | None = None) -> str:
+    """Map a requested backend (or None/"auto") to a concrete one.
+
+    ``interpret`` is the kernel wrappers' legacy explicit override: when
+    given, it forces the pallas program (interpret or compiled) and
+    ``backend`` is ignored.
+    """
+    if interpret is not None:
+        return "interpret" if interpret else "pallas"
+    if backend in (None, "auto"):
+        backend = os.environ.get(ENV_VAR, "auto")
+    if backend in (None, "auto"):
+        backend = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS} or 'auto'")
+    return backend
+
+
+def pallas_interpret(backend: str) -> bool:
+    """``interpret`` flag for a pallas_call under a resolved backend.
+
+    Callers must only use this for backends in {"pallas", "interpret"}.
+    """
+    return backend != "pallas"

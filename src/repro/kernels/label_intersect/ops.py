@@ -1,16 +1,24 @@
-"""jit'd wrapper with shape padding for the label-intersect kernel."""
+"""Backend-aware wrapper with shape padding for the label-intersect
+kernel. ``backend`` selects pallas / interpret / jnp-reference (see
+``repro.kernels.backend``); the legacy ``interpret=`` kwarg still forces
+the pallas program when given explicitly."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import pallas_interpret, resolve_backend
 from repro.kernels.label_intersect.kernel import label_intersect_kernel
+from repro.kernels.label_intersect.ref import label_intersect_ref
 
 
 def label_intersect(ids_s, d_s, ids_t, d_t, n_sentinel: int, *,
-                    bq=8, chunk=128, interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+                    bq=8, chunk=128, backend=None, interpret=None):
+    backend = resolve_backend(backend, interpret)
+    if backend == "reference":
+        return label_intersect_ref(ids_s.astype(jnp.int32),
+                                   d_s.astype(jnp.float32),
+                                   ids_t.astype(jnp.int32),
+                                   d_t.astype(jnp.float32), n_sentinel)
     q, l = ids_s.shape
     qp = -(-q // bq) * bq
     lp = -(-l // chunk) * chunk
@@ -25,5 +33,6 @@ def label_intersect(ids_s, d_s, ids_t, d_t, n_sentinel: int, *,
     mu = label_intersect_kernel(
         padi(ids_s.astype(jnp.int32)), padd(d_s.astype(jnp.float32)),
         padi(ids_t.astype(jnp.int32)), padd(d_t.astype(jnp.float32)),
-        n_sentinel=n_sentinel, bq=bq, chunk=chunk, interpret=interpret)
+        n_sentinel=n_sentinel, bq=bq, chunk=chunk,
+        interpret=pallas_interpret(backend))
     return mu[:q]

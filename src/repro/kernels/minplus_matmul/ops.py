@@ -1,11 +1,12 @@
-"""Public jit'd wrapper: arbitrary shapes via +inf padding (the min-plus
-identity), interpret-mode fallback on CPU."""
+"""Public backend-aware wrapper: arbitrary shapes via +inf padding (the
+min-plus identity); pallas / interpret / jnp-reference selection."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import pallas_interpret, resolve_backend
 from repro.kernels.minplus_matmul.kernel import minplus_matmul_kernel
+from repro.kernels.minplus_matmul.ref import minplus_matmul_ref
 
 
 def _pad_to(x, rows, cols, fill):
@@ -13,10 +14,12 @@ def _pad_to(x, rows, cols, fill):
     return jnp.pad(x, ((0, rows - r), (0, cols - c)), constant_values=fill)
 
 
-def minplus_matmul(a, b, *, bm=128, bn=128, bk=128, interpret=None):
+def minplus_matmul(a, b, *, bm=128, bn=128, bk=128, backend=None,
+                   interpret=None):
     """min-plus product for arbitrary [M,K]x[K,N] float32 inputs."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    backend = resolve_backend(backend, interpret)
+    if backend == "reference":
+        return minplus_matmul_ref(a.astype(jnp.float32), b.astype(jnp.float32))
     m, k = a.shape
     _, n = b.shape
     mp = -(-m // bm) * bm
@@ -25,5 +28,5 @@ def minplus_matmul(a, b, *, bm=128, bn=128, bk=128, interpret=None):
     ap = _pad_to(a.astype(jnp.float32), mp, kp, jnp.inf)
     bp = _pad_to(b.astype(jnp.float32), kp, np_, jnp.inf)
     out = minplus_matmul_kernel(ap, bp, bm=bm, bn=bn, bk=bk,
-                                interpret=interpret)
+                                interpret=pallas_interpret(backend))
     return out[:m, :n]

@@ -51,7 +51,8 @@ def test_small_dryrun_cell_on_8_devices():
             compiled = b.lower().compile()
         coll = collective_bytes(compiled.as_text())
         assert coll["total"] > 0, coll
-        cost = compiled.cost_analysis()
+        from repro.launch.analysis import cost_dict
+        cost = cost_dict(compiled)
         assert cost.get("flops", 0) > 0
         print("ok", coll)
     """)

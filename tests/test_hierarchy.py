@@ -3,7 +3,12 @@ Lemmas 1-3) + hypothesis property tests.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import IndexConfig, build_hierarchy, ref
 from repro.core.labeling import build_labels
@@ -102,9 +107,7 @@ def test_label_rows_sorted_unique():
         assert (np.diff(row) > 0).all(), "label row not sorted/unique"
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 10_000), deg=st.floats(1.0, 5.0))
-def test_property_hierarchy_invariants(seed, deg):
+def _hierarchy_invariants_case(seed, deg):
     n, src, dst, w = gen.er_graph(80, avg_deg=deg, seed=seed)
     h = build_hierarchy(n, src, dst, w, IndexConfig(d_cap=8))
     # partition + ascending levels along up-edges
@@ -113,6 +116,18 @@ def test_property_hierarchy_invariants(seed, deg):
         if h.level[v] < h.k:
             nbrs = h.up_ids[v][h.up_ids[v] < n]
             assert (h.level[nbrs] > h.level[v]).all()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), deg=st.floats(1.0, 5.0))
+    def test_property_hierarchy_invariants(seed, deg):
+        _hierarchy_invariants_case(seed, deg)
+else:
+    @pytest.mark.parametrize("seed,deg", [(0, 1.0), (42, 2.5), (7, 3.7),
+                                          (9001, 5.0)])
+    def test_property_hierarchy_invariants(seed, deg):
+        _hierarchy_invariants_case(seed, deg)
 
 
 def test_overflow_detection():

@@ -5,7 +5,12 @@ property tests on random graphs.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import ISLabelIndex, IndexConfig, ref
 from repro.graphs import generators as gen
@@ -79,11 +84,8 @@ def test_query_types_reported():
     assert set(np.unique(types)).issubset({1, 2, 3})
 
 
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(24, 80), avg=st.floats(1.0, 4.0),
-       maxw=st.integers(1, 9), seed=st.integers(0, 1000))
-def test_property_random_graphs(n, avg, maxw, seed):
-    """Hypothesis: exactness holds on arbitrary random sparse graphs."""
+def _random_graph_case(n, avg, maxw, seed):
+    """Exactness holds on arbitrary random sparse graphs."""
     n, src, dst, w = gen.er_graph(n, avg_deg=avg, max_w=maxw, seed=seed)
     cfg = IndexConfig(l_cap=128, label_chunk=64, d_cap=8)
     idx = ISLabelIndex.build(n, src, dst, w, cfg)
@@ -95,6 +97,20 @@ def test_property_random_graphs(n, avg, maxw, seed):
     fin = np.isfinite(want)
     assert (np.isfinite(got) == fin).all()
     np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(24, 80), avg=st.floats(1.0, 4.0),
+           maxw=st.integers(1, 9), seed=st.integers(0, 1000))
+    def test_property_random_graphs(n, avg, maxw, seed):
+        _random_graph_case(n, avg, maxw, seed)
+else:
+    @pytest.mark.parametrize("n,avg,maxw,seed",
+                             [(24, 1.0, 1, 0), (50, 2.0, 4, 77),
+                              (66, 3.3, 9, 512), (80, 4.0, 2, 999)])
+    def test_property_random_graphs(n, avg, maxw, seed):
+        _random_graph_case(n, avg, maxw, seed)
 
 
 def test_matches_bidijkstra_baseline():

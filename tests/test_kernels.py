@@ -1,10 +1,19 @@
 """Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
-swept over shapes and dtypes (+ hypothesis sweeps)."""
+swept over shapes and dtypes. ``backend="interpret"`` is passed
+explicitly: the wrappers' default resolves to the jnp reference off-TPU,
+and these tests exist to exercise the Pallas program itself. hypothesis
+is optional (requirements-dev); without it the property sweeps fall back
+to fixed parametrized cases."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.label_intersect.ops import label_intersect
 from repro.kernels.label_intersect.ref import label_intersect_ref
@@ -24,7 +33,7 @@ def test_minplus_shapes(m, k, n, dtype):
     a = RNG.random((m, k)).astype(dtype) * 10
     b = RNG.random((k, n)).astype(dtype) * 10
     a[RNG.random(a.shape) < 0.3] = np.inf        # sparse-as-inf pattern
-    got = minplus_matmul(jnp.asarray(a), jnp.asarray(b))
+    got = minplus_matmul(jnp.asarray(a), jnp.asarray(b), backend="interpret")
     want = minplus_matmul_ref(jnp.asarray(a), jnp.asarray(b))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
 
@@ -34,7 +43,7 @@ def test_minplus_block_shapes():
     b = RNG.random((96, 160)).astype(np.float32)
     for bm, bn, bk in [(32, 32, 32), (64, 128, 32), (16, 16, 96)]:
         got = minplus_matmul(jnp.asarray(a), jnp.asarray(b),
-                             bm=bm, bn=bn, bk=bk)
+                             bm=bm, bn=bn, bk=bk, backend="interpret")
         want = minplus_matmul_ref(jnp.asarray(a), jnp.asarray(b))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-6)
@@ -51,8 +60,10 @@ def test_minplus_is_apsp_step():
         w = float(RNG.integers(1, 5))
         adj[a, b] = min(adj[a, b], w)
         adj[b, a] = min(adj[b, a], w)
-    d2 = np.asarray(minplus_matmul(jnp.asarray(adj), jnp.asarray(adj)))
-    d4 = np.asarray(minplus_matmul(jnp.asarray(d2), jnp.asarray(d2)))
+    d2 = np.asarray(minplus_matmul(jnp.asarray(adj), jnp.asarray(adj),
+                                   backend="interpret"))
+    d4 = np.asarray(minplus_matmul(jnp.asarray(d2), jnp.asarray(d2),
+                                   backend="interpret"))
     import scipy.sparse.csgraph as csg
     import scipy.sparse as sp
     full = csg.shortest_path(sp.csr_matrix(np.where(np.isfinite(adj), adj, 0)))
@@ -76,7 +87,7 @@ def test_label_intersect_shapes(q, l, n_sent):
     d_t = (RNG.random((q, l)) * 9).astype(np.float32)
     got = np.asarray(label_intersect(
         jnp.asarray(ids_s), jnp.asarray(d_s), jnp.asarray(ids_t),
-        jnp.asarray(d_t), n_sent))
+        jnp.asarray(d_t), n_sent, backend="interpret"))
     want = np.asarray(label_intersect_ref(
         jnp.asarray(ids_s), jnp.asarray(d_s), jnp.asarray(ids_t),
         jnp.asarray(d_t), n_sent))
@@ -85,9 +96,7 @@ def test_label_intersect_shapes(q, l, n_sent):
     np.testing.assert_allclose(got[fin], want[fin], rtol=1e-6)
 
 
-@settings(max_examples=15, deadline=None)
-@given(q=st.integers(1, 16), l=st.integers(1, 64), seed=st.integers(0, 99))
-def test_label_intersect_property(q, l, seed):
+def _label_intersect_property_case(q, l, seed):
     r = np.random.default_rng(seed)
     n_sent = 200
     ids_s = np.sort(np.stack([r.choice(n_sent, l, replace=False)
@@ -98,7 +107,7 @@ def test_label_intersect_property(q, l, seed):
     d_t = r.random((q, l)).astype(np.float32)
     got = np.asarray(label_intersect(jnp.asarray(ids_s), jnp.asarray(d_s),
                                      jnp.asarray(ids_t), jnp.asarray(d_t),
-                                     n_sent))
+                                     n_sent, backend="interpret"))
     want = np.asarray(label_intersect_ref(jnp.asarray(ids_s),
                                           jnp.asarray(d_s),
                                           jnp.asarray(ids_t),
@@ -106,6 +115,18 @@ def test_label_intersect_property(q, l, seed):
     fin = np.isfinite(want)
     assert (np.isfinite(got) == fin).all()
     np.testing.assert_allclose(got[fin], want[fin], rtol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(q=st.integers(1, 16), l=st.integers(1, 64), seed=st.integers(0, 99))
+    def test_label_intersect_property(q, l, seed):
+        _label_intersect_property_case(q, l, seed)
+else:
+    @pytest.mark.parametrize("q,l,seed", [(1, 1, 0), (3, 17, 1), (16, 64, 7),
+                                          (5, 33, 42)])
+    def test_label_intersect_property(q, l, seed):
+        _label_intersect_property_case(q, l, seed)
 
 
 @pytest.mark.parametrize("v,e,q", [(20, 60, 3), (200, 900, 13),
@@ -117,7 +138,7 @@ def test_spmv_relax_shapes(v, e, q):
     ids, ws = coo_to_ell(v, src, dst, w)
     dist = np.full((q, v), np.inf, np.float32)
     dist[np.arange(q), RNG.integers(0, v, q)] = 0.0
-    got = spmv_relax(jnp.asarray(dist), ids, ws)
+    got = spmv_relax(jnp.asarray(dist), ids, ws, backend="interpret")
     want = spmv_relax_ref(jnp.asarray(dist), ids, ws)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
 
@@ -135,7 +156,7 @@ def test_spmv_relax_converges_to_sssp():
     dist[np.arange(4), srcs] = 0.0
     d = jnp.asarray(dist)
     for _ in range(v):
-        d = spmv_relax(d, ids, ws)
+        d = spmv_relax(d, ids, ws, backend="interpret")
     # duplicate (src,dst) pairs must keep min weight — use the dedup
     # oracle (scipy's COO->CSR sums duplicates)
     want = dijkstra_oracle(v, src, dst, w, srcs)
@@ -160,7 +181,8 @@ def test_kernel_engine_equivalence():
     ids_s, d_s = idx.lbl_ids[s], idx.lbl_d[s]
     ids_t, d_t = idx.lbl_ids[t], idx.lbl_d[t]
     mu_engine, _ = label_intersect_mu(ids_s, d_s, ids_t, d_t, n, 128)
-    mu_kernel = label_intersect(ids_s, d_s, ids_t, d_t, n)
+    mu_kernel = label_intersect(ids_s, d_s, ids_t, d_t, n,
+                                backend="interpret")
     a, b = np.asarray(mu_engine), np.asarray(mu_kernel)
     fin = np.isfinite(a)
     assert (np.isfinite(b) == fin).all()
