@@ -1,0 +1,81 @@
+"""Serving benchmark: scenarios × bucket configurations through the
+``repro.serve`` engine. Seeds the perf trajectory: results accumulate
+in ``BENCH_serving.json`` (QPS, p50/p95/p99 latency, batch fill, cache
+hit rate, lane split per cell), alongside the usual CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--full]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+SCENARIOS = ("uniform", "hotspot", "bursty", "repeated")
+
+
+def _bucket_sets(full: bool):
+    if full:
+        return [(64,), (256,), (1024,), (64, 256, 1024)]
+    return [(32,), (128,), (32, 128)]
+
+
+def main(full: bool = False) -> None:
+    from repro.core import ISLabelIndex, IndexConfig
+    from repro.graphs import generators as gen
+    from repro.serve import DistanceServer, make_trace
+
+    if full:
+        n, src, dst, w = gen.rmat_graph(14, avg_deg=6.0, seed=1)
+        n_req, rate = 16384, 200_000.0
+    else:
+        n, src, dst, w = gen.er_graph(1 << 10, 2.2, seed=2)
+        n_req, rate = 2048, 100_000.0
+    idx = ISLabelIndex.build(n, src, dst, w, IndexConfig(l_cap=512))
+
+    results = []
+    for buckets in _bucket_sets(full):
+        for scenario in SCENARIOS:
+            server = DistanceServer(idx, buckets=buckets, max_wait_ms=2.0,
+                                    cache_size=65536)
+            trace = make_trace(scenario, n=n, num_requests=n_req,
+                               rate_qps=rate, seed=0)
+            served = server.serve_trace(trace)
+            want = np.asarray(idx.query(trace.s, trace.t), np.float32)
+            assert np.array_equal(served, want), \
+                f"served != index answers ({scenario}, buckets={buckets})"
+            snap = server.stats()
+            name = f"{scenario}-b{'x'.join(str(b) for b in buckets)}"
+            us = 1e6 / snap["qps_compute"] if snap["qps_compute"] else 0.0
+            common.row("serving", name, us,
+                       qps=round(snap["qps_compute"]),
+                       p50_ms=round(snap["latency_ms"]["p50"], 2),
+                       p99_ms=round(snap["latency_ms"]["p99"], 2),
+                       fill=round(snap["batch_fill_ratio"], 3),
+                       cache=round(snap["cache_hit_rate"], 3))
+            results.append({
+                "scenario": scenario,
+                "buckets": list(buckets),
+                "requests": n_req,
+                "rate_qps": rate,
+                "qps_compute": snap["qps_compute"],
+                "qps_offered": snap["qps_offered"],
+                "latency_ms": snap["latency_ms"],
+                "batch_fill_ratio": snap["batch_fill_ratio"],
+                "cache_hit_rate": snap["cache_hit_rate"],
+                "lanes": snap["lanes"],
+                "warmup_seconds": snap["warmup_seconds"],
+            })
+    common.write_json("serving", {
+        "graph": {"kind": "rmat14" if full else "er10", "n": int(n),
+                  "m": int(len(src))},
+        "index": {"k": idx.k, "n_core": int(idx.stats.n_core),
+                  "label_entries": int(idx.stats.label_entries)},
+        "full": full,
+        "results": results,
+    })
+
+
+if __name__ == "__main__":
+    main()

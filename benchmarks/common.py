@@ -1,11 +1,30 @@
 """Shared benchmark utilities. Every table prints CSV rows:
-``table,name,us_per_call,derived...``"""
+``table,name,us_per_call,derived...`` — and every row is also collected
+so the driver can write machine-readable ``BENCH_<table>.json`` files
+(the cross-PR perf trajectory; see ``run.py`` / ``bench_serving.py``).
+"""
 from __future__ import annotations
 
+import json
+import platform
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
+
+_ROWS: list[dict] = []
+_WRITTEN: set[str] = set()
+OUT_DIR = "."          # run.py --out overrides; suites write through here
+
+
+def _env() -> dict:
+    return {
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
 
 
 def timeit(fn, *args, warmup=1, iters=3):
@@ -30,6 +49,32 @@ def _is_jax(fn, args):
 def row(table, name, us, **derived):
     extra = ",".join(f"{k}={v}" for k, v in derived.items())
     print(f"{table},{name},{us:.1f},{extra}")
+    keep = {k: v if isinstance(v, (int, float, bool)) or v is None else str(v)
+            for k, v in derived.items()}
+    _ROWS.append({"table": table, "name": name, "us_per_call": float(us),
+                  **keep})
+
+
+def write_json(table: str, payload: dict, out_dir=None) -> Path:
+    """Write ``BENCH_<table>.json``: the given payload plus this run's
+    collected CSV rows for the table and environment info. Tables
+    written here are skipped by ``flush_rows``."""
+    out = Path(OUT_DIR if out_dir is None else out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"BENCH_{table}.json"
+    doc = {"table": table, "env": _env(),
+           "rows": [r for r in _ROWS if r["table"] == table], **payload}
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    _WRITTEN.add(table)
+    return path
+
+
+def flush_rows(out_dir=None) -> list[Path]:
+    """One ``BENCH_<table>.json`` per table that only emitted CSV rows."""
+    out = []
+    for table in sorted({r["table"] for r in _ROWS} - _WRITTEN):
+        out.append(write_json(table, {}, out_dir))
+    return out
 
 
 def graphs_for_scale(full: bool):

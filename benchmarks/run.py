@@ -1,5 +1,7 @@
 """Benchmark driver: one module per paper table. Prints
-``table,name,us_per_call,derived`` CSV rows.
+``table,name,us_per_call,derived`` CSV rows and writes one
+machine-readable ``BENCH_<table>.json`` per suite (``--out``, default
+cwd) so the perf trajectory accumulates across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only tableX]
 """
@@ -14,19 +16,23 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale graphs (slow)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_<table>.json files")
     args = ap.parse_args()
 
     from benchmarks import (bench_baselines, bench_construction,
                             bench_k_sweep, bench_kernels, bench_query,
-                            roofline_report)
+                            bench_serving, common, roofline_report)
     suites = {
         "table3_construction": bench_construction.main,
         "table4_5_query": bench_query.main,
         "table6_k_sweep": bench_k_sweep.main,
         "table8_baselines": bench_baselines.main,
         "kernels": bench_kernels.main,
+        "serving": bench_serving.main,
         "roofline": roofline_report.main,
     }
+    common.OUT_DIR = args.out
     print("table,name,us_per_call,derived")
     for name, fn in suites.items():
         if args.only and args.only not in name:
@@ -36,6 +42,8 @@ def main() -> None:
         except Exception as e:
             print(f"{name},ERROR,0,{type(e).__name__}:{e}")
             traceback.print_exc()
+    for path in common.flush_rows(args.out):
+        print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -23,10 +23,12 @@ is ``[chunk, n_core+1]``, never ``[Q, n_core+1]``.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dispatch import (CoreRelaxer, core_relax,
                                  label_intersect_dispatch)
@@ -80,6 +82,8 @@ class QueryEngine:
         self.relaxer = CoreRelaxer(self.ce_src, self.ce_dst, self.ce_w,
                                    n_core) if n_core > 0 else None
         self._last_rounds = 0
+        self._batch_fns: dict = {}     # backend -> jitted serving callable
+        self._mu_batch_fns: dict = {}
 
     def _seed(self, ids, d):
         q = ids.shape[0]
@@ -142,8 +146,64 @@ class QueryEngine:
 
     def classify(self, s, t, level, k):
         """Paper Table 5 endpoint classes: 1 = both core, 2 = one core,
-        3 = neither."""
-        import numpy as np
-        in_core = (np.asarray(level)[np.asarray(s)] == k).astype(int) + \
-                  (np.asarray(level)[np.asarray(t)] == k).astype(int)
+        3 = neither. Accepts host or device arrays (and scalars) for
+        every argument; always returns a host int array."""
+        s = np.atleast_1d(np.asarray(s, np.int64))
+        t = np.atleast_1d(np.asarray(t, np.int64))
+        level = np.asarray(level)
+        in_core = (level[s] == k).astype(np.int32) + \
+                  (level[t] == k).astype(np.int32)
         return 3 - in_core
+
+    # ------------------------------------------------------- serving APIs
+    def batch_fn(self, backend: str | None = None):
+        """Jitted fixed-shape batched query callable for serving.
+
+        Returns ``run(s, t) -> (ans float32[Q], rounds int32 scalar)``
+        with no host sync inside — the serving layer owns blocking and
+        timing. One compilation per distinct batch shape; the returned
+        object is memoized per resolved backend on this engine (shared
+        by every server over the index), so its jit cache counts the
+        engine's compiled shapes — serving must never grow them after
+        warmup.
+        """
+        backend = resolve_backend(self.backend if backend is None else backend)
+        if backend not in self._batch_fns:
+            def run(s, t):
+                ans, rounds = self._query_block(s, t, backend)
+                return ans, (jnp.int32(0) if rounds is None else rounds)
+            self._batch_fns[backend] = jax.jit(run)
+        return self._batch_fns[backend]
+
+    def mu_batch_fn(self, backend: str | None = None):
+        """Jitted fixed-shape Equation-1-only callable (Type-1 fast
+        path): ``run(s, t) -> ans float32[Q]``. Memoized per backend,
+        same contract as ``batch_fn``."""
+        backend = resolve_backend(self.backend if backend is None else backend)
+        if backend not in self._mu_batch_fns:
+            def run(s, t):
+                return label_intersect_dispatch(
+                    self.lbl_ids[s], self.lbl_d[s],
+                    self.lbl_ids[t], self.lbl_d[t], self.n, backend)
+            self._mu_batch_fns[backend] = jax.jit(run)
+        return self._mu_batch_fns[backend]
+
+    def warmup(self, batch_sizes, backend: str | None = None,
+               mu_only: bool = False) -> dict:
+        """Pre-compile the serving entry points for every batch size.
+
+        Runs one dummy batch per (path, size) through ``batch_fn`` /
+        ``mu_batch_fn`` so no XLA compile happens on the serving path.
+        Returns {(path, size): seconds} compile+run timings.
+        """
+        fns = [("mu", self.mu_batch_fn(backend))]
+        if not mu_only:
+            fns.append(("full", self.batch_fn(backend)))
+        out = {}
+        for name, fn in fns:
+            for size in batch_sizes:
+                z = jnp.zeros(int(size), jnp.int32)
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(z, z))
+                out[(name, int(size))] = time.perf_counter() - t0
+        return out

@@ -2,17 +2,25 @@
 
 * ``--mode lm``: prefill + decode loop for a (smoke) LM config: batched
   requests, KV-cache reuse, tokens/s report.
-* ``--mode distance``: the paper's workload — build an IS-LABEL index
-  over a synthetic graph and serve batched P2P distance queries
-  (continuous batching: requests accumulate into fixed-size query
-  batches; Type-1 fast path via labels only).
+* ``--mode distance``: the paper's workload, served through the
+  ``repro.serve`` subsystem (docs/SERVING.md): build or load an
+  IS-LABEL index, register it, replay a scenario trace from the load
+  generator through the micro-batching/routing/caching engine, audit
+  every served answer, and print the metrics snapshot as JSON.
 
   PYTHONPATH=src python -m repro.launch.serve --mode distance \
-      --n 20000 --queries 5000 --batch 512
+      --scenario hotspot --n 4096 --queries 4096 --buckets 64,256,1024
+
+  ``--audit index`` (default) checks bitwise equality of every served
+  answer against a direct ``ISLabelIndex.query`` pass; ``--audit
+  dijkstra`` additionally checks a sample against the host Dijkstra
+  oracle (``core/ref.py``) — the CI smoke step runs the latter on a
+  tiny graph. The process exits nonzero on any mismatch or zero QPS.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -44,38 +52,80 @@ def serve_lm(args):
           f"({total / dt:.1f} tok/s incl. compile)")
 
 
-def serve_distance(args):
-    from repro.core import ISLabelIndex, IndexConfig
+def _build_graph(args):
     from repro.graphs import generators as gen
-    n, src, dst, w = gen.rmat_graph(int(np.log2(args.n)), avg_deg=6.0,
-                                    seed=1)
-    print(f"[serve-distance] graph n={n} m={len(src)}")
-    t0 = time.time()
-    idx = ISLabelIndex.build(n, src, dst, w, IndexConfig(l_cap=512))
-    print(f"  index built in {time.time() - t0:.1f}s: {idx.stats.summary()}")
+    if args.graph == "rmat":
+        return gen.rmat_graph(int(np.log2(args.n)), avg_deg=6.0, seed=1)
+    if args.graph == "er":
+        return gen.er_graph(args.n, avg_deg=2.2, seed=1)
+    return gen.grid_graph(int(np.sqrt(args.n)), seed=1)
 
-    rng = np.random.default_rng(0)
-    total, t_q = 0, 0.0
-    lat = []
-    pending_s, pending_t = [], []
-    for _ in range(args.queries):
-        pending_s.append(rng.integers(0, n))
-        pending_t.append(rng.integers(0, n))
-        if len(pending_s) == args.batch:        # continuous batching window
-            s = np.asarray(pending_s, np.int32)
-            t = np.asarray(pending_t, np.int32)
-            t1 = time.time()
-            d = idx.query(s, t)
-            jax.block_until_ready(d)
-            dt = time.time() - t1
-            lat.append(dt)
-            total += len(s)
-            t_q += dt
-            pending_s, pending_t = [], []
-    qps = total / t_q if t_q else 0
-    print(f"  served {total} queries at {qps:.0f} q/s "
-          f"(batch={args.batch}, p50={np.median(lat) * 1e3:.1f}ms, "
-          f"p99={np.quantile(lat, 0.99) * 1e3:.1f}ms incl. compile)")
+
+def serve_distance(args) -> int:
+    from repro.core import ISLabelIndex, IndexConfig, ref
+    from repro.serve import IndexRegistry, make_trace
+
+    if args.load:
+        idx = ISLabelIndex.load(args.load)
+        n = idx.n
+        src = dst = w = None
+        print(f"[serve-distance] loaded index: {idx.stats.summary()}")
+    else:
+        n, src, dst, w = _build_graph(args)
+        print(f"[serve-distance] graph {args.graph} n={n} m={len(src)}")
+        t0 = time.time()
+        idx = ISLabelIndex.build(n, src, dst, w, IndexConfig(l_cap=args.l_cap))
+        print(f"  index built in {time.time() - t0:.1f}s: "
+              f"{idx.stats.summary()}")
+        if args.save:
+            idx.save(args.save)
+
+    registry = IndexRegistry()
+    server = registry.register(
+        args.index_name, idx,
+        buckets=tuple(int(b) for b in args.buckets.split(",")),
+        max_wait_ms=args.max_wait_ms, cache_size=args.cache,
+        backend=args.backend or None)
+    print(f"  warmed {server.compile_cache_sizes()} shapes "
+          f"in {server.warmup_seconds:.1f}s")
+
+    trace = make_trace(args.scenario, n=n, num_requests=args.queries,
+                       rate_qps=args.rate, seed=args.seed)
+    served = server.serve_trace(trace)
+    stats = server.stats()
+    print(json.dumps(stats, indent=2, sort_keys=True))
+
+    failures = 0
+    if args.audit in ("index", "dijkstra"):
+        want = np.asarray(idx.query(trace.s, trace.t), np.float32)
+        bad = int((~((served == want)
+                     | (np.isnan(served) & np.isnan(want)))).sum())
+        if bad:
+            print(f"  AUDIT FAIL: {bad} served answers differ from "
+                  f"ISLabelIndex.query")
+            failures += 1
+        else:
+            print(f"  audit[index]: {len(trace)}/{len(trace)} served answers "
+                  f"bitwise-equal to ISLabelIndex.query")
+    if args.audit == "dijkstra" and src is None:
+        print("  audit[dijkstra]: SKIPPED — no edge list with --load "
+              "(index-equality audit above still ran)")
+    if args.audit == "dijkstra" and src is not None:
+        k = min(len(trace), args.audit_sample)
+        srcs, inv = np.unique(trace.s[:k], return_inverse=True)
+        oracle = ref.dijkstra_oracle(n, src, dst, w, srcs)
+        want = oracle[inv, trace.t[:k]].astype(np.float32)
+        ok = np.isfinite(want)
+        if not (np.allclose(served[:k][ok], want[ok])
+                and np.all(~np.isfinite(served[:k][~ok]))):
+            print("  AUDIT FAIL: served answers differ from Dijkstra oracle")
+            failures += 1
+        else:
+            print(f"  audit[dijkstra]: {k} answers match the oracle")
+    if stats["qps_compute"] <= 0:
+        print("  AUDIT FAIL: zero QPS")
+        failures += 1
+    return failures
 
 
 def main():
@@ -84,13 +134,32 @@ def main():
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--n", type=int, default=16384)
+    # -- distance serving (thin CLI over repro.serve) ----------------------
+    ap.add_argument("--graph", choices=["rmat", "er", "grid"], default="rmat")
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--l-cap", type=int, default=512)
     ap.add_argument("--queries", type=int, default=4096)
+    ap.add_argument("--scenario", default="uniform",
+                    help="uniform | hotspot | bursty | repeated")
+    ap.add_argument("--rate", type=float, default=50000.0,
+                    help="offered load, requests/s on the trace clock")
+    ap.add_argument("--buckets", default="64,256,1024")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--cache", type=int, default=65536)
+    ap.add_argument("--backend", default="",
+                    help="kernel backend override (auto if empty)")
+    ap.add_argument("--audit", choices=["index", "dijkstra", "none"],
+                    default="index")
+    ap.add_argument("--audit-sample", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--index-name", default="default")
+    ap.add_argument("--save", default="")
+    ap.add_argument("--load", default="")
     args = ap.parse_args()
     if args.mode == "lm":
         serve_lm(args)
     else:
-        serve_distance(args)
+        raise SystemExit(serve_distance(args))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,15 @@
+# repro.serve — the distance-serving subsystem over ISLabelIndex:
+# shape-bucket micro-batching, μ-exact routing, LRU caching, metrics,
+# a multi-graph registry, and a scenario load generator.
+from repro.serve.batcher import Batch, MicroBatcher, PendingRequest
+from repro.serve.cache import LRUCache
+from repro.serve.engine import DistanceServer, mu_exact_mask
+from repro.serve.loadgen import SCENARIOS, Trace, make_trace
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import IndexRegistry
+
+__all__ = [
+    "Batch", "MicroBatcher", "PendingRequest", "LRUCache",
+    "DistanceServer", "mu_exact_mask", "SCENARIOS", "Trace", "make_trace",
+    "ServeMetrics", "IndexRegistry",
+]

@@ -1,0 +1,235 @@
+"""`DistanceServer` — the serving engine over one `ISLabelIndex`.
+
+Pipeline (request → answer):
+
+  submit ──► LRU cache probe ──hit──► answer (zero latency)
+     │ miss
+     ▼
+  routing: μ-exact pairs → "mu" lane, everything else → "full" lane
+     ▼
+  per-lane MicroBatcher (shape buckets + max-wait deadline)
+     ▼
+  pump: drained batches padded to their bucket, run through the
+  pre-warmed jitted entry points (QueryEngine.batch_fn / mu_batch_fn)
+     ▼
+  answers + metrics (+ cache fill)
+
+Routing soundness. The full answer is ``min(μ, min_v DS[v] + DT[v])``
+(Algorithm 1). We route a pair through the Equation-1-only fast path
+only when the core term is *provably* +inf: at least one endpoint's
+label contains no finite-distance core vertex, so its stage-2 seed
+vector is all-inf and the core search cannot contribute. The paper's
+§5.2 endpoint classification (`classify`) alone cannot certify this —
+a Type-3 pair (neither endpoint in the core) may still meet in the
+core — so `classify` feeds the served type-mix metric while the label
+mask decides the lane. This keeps the serving guarantee bitwise: every
+served answer equals ``ISLabelIndex.query`` exactly, whichever lane it
+took. On indexes whose hierarchy consumed the whole graph
+(n_core == 0) every request is μ-exact and the full lane stays idle.
+
+The engine is clock-driven and deterministic: callers pass ``now``
+(simulated or wall time) to ``submit``/``pump``. ``serve_trace`` replays
+a loadgen trace on its own clock — queue waits come from the trace
+timeline, execution times from the device. A thread or asyncio front
+end owns its lock and calls the same three methods with wall time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.batcher import MicroBatcher, PendingRequest
+from repro.serve.cache import LRUCache
+from repro.serve.metrics import ServeMetrics
+
+LANES = ("mu", "full")
+
+
+def mu_exact_mask(index) -> np.ndarray:
+    """bool[n+1]: vertex v's label has no finite-distance core entry.
+
+    For such v, stage 2's seed vector is all +inf, so for any pair with
+    ``mask[s] or mask[t]`` the core term is +inf and μ alone is the
+    exact (bitwise-identical) answer.
+    """
+    n, k = index.n, index.k
+    lev_pad = jnp.asarray(np.append(index.level, k + 1).astype(np.int32))
+    entry_core = ((index.lbl_ids < n)
+                  & (lev_pad[jnp.minimum(index.lbl_ids, n)] == k)
+                  & jnp.isfinite(index.lbl_d))
+    return ~np.asarray(jnp.any(entry_core, axis=1))
+
+
+class DistanceServer:
+    """Micro-batching, routing, caching distance server for one index."""
+
+    def __init__(self, index, *, name: str = "default",
+                 buckets=(64, 256, 1024), max_wait_ms: float = 2.0,
+                 cache_size: int = 65536, cache_symmetric: bool = False,
+                 backend: str | None = None, warmup: bool = True):
+        self.index = index
+        self.name = name
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.max_wait_s = float(max_wait_ms) * 1e-3
+        self.backend = backend
+        self.metrics = ServeMetrics()
+        self.cache = LRUCache(cache_size, symmetric=cache_symmetric)
+        self.lanes = {lane: MicroBatcher(self.buckets, self.max_wait_s)
+                      for lane in LANES}
+        self._no_core_entry = mu_exact_mask(index)
+        self._fns = {"mu": index.engine.mu_batch_fn(backend),
+                     "full": index.engine.batch_fn(backend)}
+        self._results: dict[int, float] = {}
+        self._next_rid = 0
+        self.warmup_seconds = 0.0
+        if warmup:
+            self.warmup()
+
+    def refresh(self, warmup: bool = True) -> None:
+        """Re-sync with the index after an in-place mutation (§8.3
+        ``insert_vertex``/``delete_vertex``): drops every cached
+        answer, recomputes the routing mask, and rebinds (and by
+        default re-warms) the compiled entry points — the mutators
+        install a fresh ``QueryEngine``."""
+        self.cache.clear()
+        self._no_core_entry = mu_exact_mask(self.index)
+        self._fns = {"mu": self.index.engine.mu_batch_fn(self.backend),
+                     "full": self.index.engine.batch_fn(self.backend)}
+        if warmup:
+            self.warmup()
+
+    # ----------------------------------------------------------- warmup
+    def warmup(self) -> dict:
+        """Compile every (lane, bucket) entry point up front so no XLA
+        compile happens on the serving path (asserted in tests via the
+        jit cache sizes)."""
+        t0 = time.perf_counter()
+        timings = self.index.engine.warmup(self.buckets, self.backend)
+        self.warmup_seconds = time.perf_counter() - t0
+        return timings
+
+    def compile_cache_sizes(self) -> dict:
+        """Per-lane jit cache entry counts (one per compiled shape).
+
+        The jitted entry points are memoized per (index engine,
+        backend) and therefore *shared* by every server over the same
+        index — another server's warmup can grow these counts. The
+        zero-compile-on-the-serving-path guarantee is the delta: the
+        counts do not change across any amount of serving (asserted in
+        tests/test_serving.py). Counts are -1 when the running JAX
+        stops exposing the (private) cache-size probe."""
+        out = {}
+        for lane, fn in self._fns.items():
+            probe = getattr(fn, "_cache_size", None)
+            out[lane] = int(probe()) if callable(probe) else -1
+        return out
+
+    # ---------------------------------------------------------- routing
+    def route(self, s, t) -> np.ndarray:
+        """Lane per pair: "mu" where Equation 1 is provably exact.
+
+        Also tallies the paper's §5.2 endpoint classes (``classify``:
+        1 = both core, 2 = one, 3 = neither) into the metrics — class 1
+        pairs are never μ-eligible (each core endpoint holds itself as
+        a core label entry), class 2/3 only when the mask proves the
+        core term is +inf."""
+        s = np.atleast_1d(np.asarray(s, np.int64))
+        t = np.atleast_1d(np.asarray(t, np.int64))
+        cls = self.index.engine.classify(s, t, self.index.level, self.index.k)
+        self.metrics.record_types(cls)
+        eligible = self._no_core_entry[s] | self._no_core_entry[t]
+        return np.where(eligible, "mu", "full")
+
+    # ------------------------------------------------------ request path
+    def submit(self, s: int, t: int, now: float,
+               lane: str | None = None) -> int:
+        """Enqueue one query; returns its request id. Cache hits are
+        answered immediately (the rid is already resolved)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        hit = self.cache.get(s, t)
+        if hit is not None:
+            self._results[rid] = hit
+            self.metrics.record_cache_hit()
+            return rid
+        if lane is None:
+            lane = str(self.route(s, t)[0])
+        self.lanes[lane].add(PendingRequest(rid, int(s), int(t), float(now)))
+        return rid
+
+    def pump(self, now: float, force: bool = False) -> int:
+        """Execute every batch that is ready at ``now`` (bucket filled,
+        deadline expired, or ``force``). Returns requests completed."""
+        done = 0
+        for lane_name, lane in self.lanes.items():
+            while (batch := lane.drain(now, force=force)) is not None:
+                done += self._execute(lane_name, batch)
+        return done
+
+    def take_result(self, rid: int) -> float | None:
+        return self._results.pop(rid, None)
+
+    def _execute(self, lane: str, batch) -> int:
+        reqs = batch.requests
+        p = len(reqs)
+        s = np.fromiter((r.s for r in reqs), np.int32, p)
+        t = np.fromiter((r.t for r in reqs), np.int32, p)
+        pad = batch.bucket - p                  # edge-pad: replays last req
+        s_pad = jnp.asarray(np.pad(s, (0, pad), mode="edge"))
+        t_pad = jnp.asarray(np.pad(t, (0, pad), mode="edge"))
+        t0 = time.perf_counter()
+        out = self._fns[lane](s_pad, t_pad)
+        out = jax.block_until_ready(out)
+        exec_s = time.perf_counter() - t0
+        if lane == "full":
+            ans, rounds = np.asarray(out[0]), int(out[1])
+        else:
+            ans, rounds = np.asarray(out), 0
+        for i, r in enumerate(reqs):
+            val = float(ans[i])
+            self._results[r.rid] = val
+            self.cache.put(r.s, r.t, val)
+            # clamp: with sparse wall-clock pumps a request can arrive
+            # after the oldest's deadline (the stamped flush instant)
+            wait = max(0.0, batch.t_flush - r.t_arrival)
+            self.metrics.record_latency(wait + exec_s)
+        self.metrics.record_batch(lane, batch.bucket, p, exec_s, rounds)
+        return p
+
+    # ------------------------------------------------------ trace replay
+    def serve_trace(self, trace) -> np.ndarray:
+        """Replay a loadgen trace on its simulated clock. Returns
+        float32 answers aligned with the trace; metrics accumulate on
+        ``self.metrics``."""
+        n_req = len(trace)
+        lanes = self.route(trace.s, trace.t)
+        rids = np.empty(n_req, np.int64)
+        for i in range(n_req):
+            now = float(trace.arrival_s[i])
+            self.pump(now)
+            rids[i] = self.submit(int(trace.s[i]), int(trace.t[i]), now,
+                                  lane=str(lanes[i]))
+            self.pump(now)
+        self.pump(trace.span_s, force=True)
+        self.metrics.trace_span_s += trace.span_s
+        answers = np.empty(n_req, np.float32)
+        for i in range(n_req):
+            answers[i] = self._results.pop(int(rids[i]))
+        return answers
+
+    # ----------------------------------------------------------- status
+    def stats(self) -> dict:
+        return {
+            "name": self.name,
+            "graph": {"n": self.index.n, "k": self.index.k,
+                      "n_core": int(self.index.stats.n_core)},
+            "buckets": list(self.buckets),
+            "max_wait_ms": self.max_wait_s * 1e3,
+            "backend": self.backend or "auto",
+            "warmup_seconds": self.warmup_seconds,
+            "compiled_shapes": self.compile_cache_sizes(),
+            **self.metrics.snapshot(),
+        }

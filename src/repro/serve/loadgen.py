@@ -1,0 +1,132 @@
+"""Scenario load generator: synthetic request traces for the serving
+subsystem and its benchmarks.
+
+A trace is (arrival_s, s, t) arrays sorted by arrival time; the server
+replays it on a simulated clock (`DistanceServer.serve_trace`), so the
+same trace is exactly reproducible across runs, backends, and saved /
+loaded indexes.
+
+Scenarios (endpoint distribution × arrival process):
+
+  * ``uniform``  — endpoints uniform over V, Poisson arrivals. The
+    paper's random-query evaluation regime (Table 4/5).
+  * ``hotspot``  — endpoints Zipf-distributed over a random permutation
+    of V (a small hot set receives most traffic), Poisson arrivals.
+    Social/web traffic shape; exercises the result cache and skewed
+    label rows.
+  * ``bursty``   — uniform endpoints, arrivals in on/off bursts: a
+    burst of B requests back-to-back, then an idle gap. Exercises both
+    batcher regimes (full buckets inside a burst, deadline flushes at
+    the gap edges).
+  * ``repeated`` — requests drawn from a small fixed pool of (s, t)
+    pairs, Poisson arrivals. Dashboard/monitoring shape; upper-bounds
+    cache effectiveness.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Trace:
+    name: str
+    arrival_s: np.ndarray    # float64[R], sorted, seconds from 0
+    s: np.ndarray            # int32[R]
+    t: np.ndarray            # int32[R]
+    meta: dict
+
+    def __len__(self) -> int:
+        return len(self.arrival_s)
+
+    @property
+    def span_s(self) -> float:
+        return float(self.arrival_s[-1]) if len(self.arrival_s) else 0.0
+
+
+def _poisson_arrivals(rng, num_requests: int, rate_qps: float) -> np.ndarray:
+    gaps = rng.exponential(1.0 / rate_qps, num_requests)
+    out = np.cumsum(gaps)
+    return out - out[0]
+
+
+def _zipf_endpoints(rng, n: int, size: int, alpha: float) -> np.ndarray:
+    """Zipf ranks clipped to [1, n], mapped through a random permutation
+    so the hot set is scattered over vertex ids."""
+    ranks = np.minimum(rng.zipf(alpha, size), n) - 1
+    perm = rng.permutation(n)
+    return perm[ranks].astype(np.int32)
+
+
+def uniform_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
+                  seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    return Trace(
+        "uniform", _poisson_arrivals(rng, num_requests, rate_qps),
+        rng.integers(0, n, num_requests).astype(np.int32),
+        rng.integers(0, n, num_requests).astype(np.int32),
+        {"n": n, "rate_qps": rate_qps, "seed": seed})
+
+
+def hotspot_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
+                  seed: int = 0, alpha: float = 1.2) -> Trace:
+    rng = np.random.default_rng(seed)
+    return Trace(
+        "hotspot", _poisson_arrivals(rng, num_requests, rate_qps),
+        _zipf_endpoints(rng, n, num_requests, alpha),
+        _zipf_endpoints(rng, n, num_requests, alpha),
+        {"n": n, "rate_qps": rate_qps, "seed": seed, "alpha": alpha})
+
+
+def bursty_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
+                 seed: int = 0, burst: int = 128,
+                 duty_cycle: float = 0.1) -> Trace:
+    """Bursts of ``burst`` requests at ``rate_qps / duty_cycle`` within
+    the burst, separated by idle gaps so the long-run rate is
+    ``rate_qps``."""
+    rng = np.random.default_rng(seed)
+    in_burst_gap = duty_cycle / rate_qps
+    gaps = np.full(num_requests, in_burst_gap)
+    # total idle budget spread over the interior gaps (the trace starts
+    # at t=0, so there are n_bursts-1 of them — without the correction
+    # the realized rate overshoots rate_qps by ~1/n_bursts)
+    n_bursts = -(-num_requests // burst)
+    idle_total = (burst / rate_qps) * (1.0 - duty_cycle) * n_bursts
+    gaps[::burst] = idle_total / max(n_bursts - 1, 1)
+    gaps[0] = 0.0
+    return Trace(
+        "bursty", np.cumsum(gaps),
+        rng.integers(0, n, num_requests).astype(np.int32),
+        rng.integers(0, n, num_requests).astype(np.int32),
+        {"n": n, "rate_qps": rate_qps, "seed": seed, "burst": burst,
+         "duty_cycle": duty_cycle})
+
+
+def repeated_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
+                   seed: int = 0, pool: int = 256) -> Trace:
+    rng = np.random.default_rng(seed)
+    ps = rng.integers(0, n, pool).astype(np.int32)
+    pt = rng.integers(0, n, pool).astype(np.int32)
+    pick = rng.integers(0, pool, num_requests)
+    return Trace(
+        "repeated", _poisson_arrivals(rng, num_requests, rate_qps),
+        ps[pick], pt[pick],
+        {"n": n, "rate_qps": rate_qps, "seed": seed, "pool": pool})
+
+
+SCENARIOS = {
+    "uniform": uniform_trace,
+    "hotspot": hotspot_trace,
+    "bursty": bursty_trace,
+    "repeated": repeated_trace,
+}
+
+
+def make_trace(scenario: str, n: int, num_requests: int, **kw) -> Trace:
+    try:
+        fn = SCENARIOS[scenario]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {scenario!r}; one of {sorted(SCENARIOS)}")
+    return fn(n, num_requests, **kw)

@@ -1,0 +1,106 @@
+"""Serving metrics: QPS, latency percentiles, batch fill, cache hits,
+relaxation rounds — with JSON export so benchmark runs accumulate a
+machine-readable perf trajectory (``BENCH_serving.json``).
+
+Latency accounting: a request's latency is queue wait (flush instant −
+arrival, on the trace's clock) plus the measured wall-clock execution
+time of the batch that served it. Cache hits have zero latency. QPS is
+reported two ways: ``qps_compute`` (device-path requests / summed
+device execution time — what the hardware sustains; cache hits are
+excluded from the numerator since they consume no device time) and
+``qps_offered`` (all served requests / trace span — what the scenario
+asked for).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    lane: str          # "full" | "mu"
+    bucket: int
+    n_real: int
+    exec_s: float
+    rounds: int
+
+    @property
+    def fill(self) -> float:
+        return self.n_real / self.bucket
+
+
+class ServeMetrics:
+    """Accumulates per-request and per-batch observations."""
+
+    def __init__(self):
+        self.batches: list[BatchRecord] = []
+        self.latencies: list[float] = []
+        self.served = 0
+        self.cache_hits = 0
+        self.trace_span_s = 0.0
+        self.type_counts = {1: 0, 2: 0, 3: 0}   # paper §5.2 endpoint classes
+
+    # ------------------------------------------------------------ record
+    def record_batch(self, lane: str, bucket: int, n_real: int,
+                     exec_s: float, rounds: int) -> None:
+        self.batches.append(BatchRecord(lane, bucket, n_real, exec_s, rounds))
+        self.served += n_real
+
+    def record_latency(self, seconds: float) -> None:
+        self.latencies.append(seconds)
+
+    def record_cache_hit(self) -> None:
+        self.cache_hits += 1
+        self.served += 1
+        self.latencies.append(0.0)
+
+    def record_types(self, classes) -> None:
+        for c, cnt in zip(*np.unique(np.asarray(classes), return_counts=True)):
+            self.type_counts[int(c)] += int(cnt)
+
+    # ----------------------------------------------------------- export
+    def snapshot(self) -> dict:
+        lat = np.asarray(self.latencies, np.float64)
+        exec_total = sum(b.exec_s for b in self.batches)
+        lanes = {}
+        for lane in ("mu", "full"):
+            bs = [b for b in self.batches if b.lane == lane]
+            lanes[lane] = {
+                "batches": len(bs),
+                "requests": sum(b.n_real for b in bs),
+                "fill_ratio": float(np.mean([b.fill for b in bs])) if bs else 0.0,
+                "rounds_per_batch": float(np.mean([b.rounds for b in bs])) if bs else 0.0,
+            }
+        total = self.served
+        batch_served = sum(b.n_real for b in self.batches)
+        bucket_counts: dict[str, int] = {}
+        for b in self.batches:
+            bucket_counts[str(b.bucket)] = bucket_counts.get(str(b.bucket), 0) + 1
+        return {
+            "served": total,
+            "batches": len(self.batches),
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": self.cache_hits / total if total else 0.0,
+            # device-path requests only: cache hits consume no device
+            # time and must not inflate the hardware-throughput figure
+            "qps_compute": batch_served / exec_total if exec_total else 0.0,
+            "qps_offered": (total / self.trace_span_s
+                            if self.trace_span_s else 0.0),
+            "latency_ms": {
+                "p50": float(np.quantile(lat, 0.50) * 1e3) if len(lat) else 0.0,
+                "p95": float(np.quantile(lat, 0.95) * 1e3) if len(lat) else 0.0,
+                "p99": float(np.quantile(lat, 0.99) * 1e3) if len(lat) else 0.0,
+                "mean": float(lat.mean() * 1e3) if len(lat) else 0.0,
+            },
+            "batch_fill_ratio": (float(np.mean([b.fill for b in self.batches]))
+                                 if self.batches else 0.0),
+            "bucket_counts": bucket_counts,
+            "lanes": lanes,
+            "query_types": {str(k): v for k, v in self.type_counts.items()},
+        }
+
+    def to_json(self, **extra) -> str:
+        return json.dumps({**self.snapshot(), **extra}, indent=2, sort_keys=True)

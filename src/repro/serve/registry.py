@@ -1,0 +1,45 @@
+"""Index registry: one server process, many named graphs.
+
+Each registered name owns a `DistanceServer` (its own lanes, cache,
+metrics, and pre-warmed compiled shapes) over one `ISLabelIndex`; the
+registry is just the name → server map plus aggregate stats, so a
+multi-tenant front end routes on name and the per-graph engines stay
+independent.
+"""
+from __future__ import annotations
+
+from repro.serve.engine import DistanceServer
+
+
+class IndexRegistry:
+    def __init__(self):
+        self._servers: dict[str, DistanceServer] = {}
+
+    def register(self, name: str, index, **server_kwargs) -> DistanceServer:
+        """Wrap ``index`` in a DistanceServer under ``name`` (replacing
+        any previous holder of the name) and return it."""
+        server = DistanceServer(index, name=name, **server_kwargs)
+        self._servers[name] = server
+        return server
+
+    def unregister(self, name: str) -> None:
+        del self._servers[name]
+
+    def get(self, name: str) -> DistanceServer:
+        try:
+            return self._servers[name]
+        except KeyError:
+            raise KeyError(
+                f"no index named {name!r}; registered: {sorted(self._servers)}")
+
+    def names(self) -> list[str]:
+        return sorted(self._servers)
+
+    def __len__(self) -> int:
+        return len(self._servers)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._servers
+
+    def stats(self) -> dict:
+        return {name: srv.stats() for name, srv in self._servers.items()}

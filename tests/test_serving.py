@@ -1,0 +1,304 @@
+"""Tier-1 tests for the ``repro.serve`` subsystem (docs/SERVING.md).
+
+Covers: micro-batcher bucket/deadline mechanics, LRU cache, load
+generator scenarios, metrics export, serving exactness vs
+``ISLabelIndex.query`` (bitwise, per scenario), zero-compiles-after-
+warmup, μ-lane routing soundness, the index registry, and the
+save/load → serve round trip across kernel backends.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ISLabelIndex, IndexConfig
+from repro.graphs import generators as gen
+from repro.serve import (DistanceServer, IndexRegistry, LRUCache,
+                         MicroBatcher, PendingRequest, make_trace,
+                         mu_exact_mask)
+
+BUCKETS = (8, 32)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    # sparse ER: the BTC-like regime — small components exist, so the
+    # μ-only fast lane sees real traffic (routing is exercised).
+    return gen.er_graph(700, 2.2, seed=2)
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    n, src, dst, w = graph
+    return ISLabelIndex.build(n, src, dst, w, IndexConfig(l_cap=256))
+
+
+@pytest.fixture(scope="module")
+def server(index):
+    return DistanceServer(index, buckets=BUCKETS, max_wait_ms=1.0,
+                          cache_size=4096)
+
+
+# --------------------------------------------------------------- batcher
+def _reqs(ts):
+    return [PendingRequest(i, i, i, t) for i, t in enumerate(ts)]
+
+
+def test_batcher_full_bucket_flush():
+    mb = MicroBatcher(buckets=(4, 8), max_wait_s=1.0)
+    for r in _reqs([0.0] * 9):
+        mb.add(r)
+    b = mb.drain(now=0.0)
+    assert b.bucket == 8 and len(b.requests) == 8 and b.fill == 1.0
+    # remainder is below every bucket and inside the deadline: waits
+    assert mb.drain(now=0.0) is None and len(mb) == 1
+
+
+def test_batcher_deadline_flush_pads_to_smallest_bucket():
+    mb = MicroBatcher(buckets=(4, 8), max_wait_s=0.010)
+    for r in _reqs([0.0, 0.001, 0.002]):
+        mb.add(r)
+    assert mb.drain(now=0.005) is None          # deadline not reached
+    b = mb.drain(now=0.011)
+    assert b is not None and b.bucket == 4 and len(b.requests) == 3
+    assert b.t_flush == pytest.approx(0.010)    # flush fired at deadline
+    assert mb.drain(now=1.0) is None            # queue drained
+
+
+def test_batcher_force_flush_and_bucket_choice():
+    mb = MicroBatcher(buckets=(4, 8), max_wait_s=10.0)
+    for r in _reqs([0.0] * 6):
+        mb.add(r)
+    b = mb.drain(now=0.0, force=True)
+    assert b.bucket == 8 and len(b.requests) == 6   # smallest bucket >= 6
+    assert mb.next_deadline() is None
+
+
+def test_batcher_rejects_bad_buckets():
+    with pytest.raises(ValueError):
+        MicroBatcher(buckets=())
+    with pytest.raises(ValueError):
+        MicroBatcher(buckets=(0, 4))
+
+
+# ----------------------------------------------------------------- cache
+def test_lru_cache_eviction_and_hit_rate():
+    c = LRUCache(2)
+    c.put(1, 2, 5.0)
+    c.put(3, 4, 7.0)
+    assert c.get(1, 2) == 5.0           # refreshes (1,2)
+    c.put(5, 6, 9.0)                    # evicts (3,4)
+    assert c.get(3, 4) is None
+    assert c.get(1, 2) == 5.0 and c.get(5, 6) == 9.0
+    assert c.hits == 3 and c.misses == 1 and len(c) == 2
+
+
+def test_lru_cache_symmetric_and_disabled():
+    c = LRUCache(8, symmetric=True)
+    c.put(2, 1, 3.0)
+    assert c.get(1, 2) == 3.0
+    off = LRUCache(0)
+    off.put(1, 2, 3.0)
+    assert off.get(1, 2) is None and len(off) == 0
+
+
+# --------------------------------------------------------------- loadgen
+@pytest.mark.parametrize("scenario", ["uniform", "hotspot", "bursty",
+                                      "repeated"])
+def test_loadgen_traces_well_formed(scenario):
+    tr = make_trace(scenario, n=500, num_requests=300, rate_qps=1e4, seed=1)
+    assert len(tr) == 300 and tr.name == scenario
+    assert np.all(np.diff(tr.arrival_s) >= 0) and tr.arrival_s[0] >= 0
+    for arr in (tr.s, tr.t):
+        assert arr.dtype == np.int32
+        assert arr.min() >= 0 and arr.max() < 500
+
+
+def test_loadgen_scenario_shapes():
+    hot = make_trace("hotspot", n=2000, num_requests=1000, seed=1)
+    uni = make_trace("uniform", n=2000, num_requests=1000, seed=1)
+    # zipf endpoints concentrate: far fewer distinct sources than uniform
+    assert len(np.unique(hot.s)) < 0.5 * len(np.unique(uni.s))
+    rep = make_trace("repeated", n=2000, num_requests=1000, pool=64, seed=1)
+    pairs = {(int(a), int(b)) for a, b in zip(rep.s, rep.t)}
+    assert len(pairs) <= 64
+    with pytest.raises(ValueError):
+        make_trace("nope", n=10, num_requests=1)
+
+
+# --------------------------------------------------- serving exactness
+@pytest.mark.parametrize("scenario", ["uniform", "hotspot", "bursty",
+                                      "repeated"])
+def test_serve_trace_matches_index_bitwise(index, server, scenario):
+    tr = make_trace(scenario, n=index.n, num_requests=300, rate_qps=2e4,
+                    seed=4)
+    got = server.serve_trace(tr)
+    want = np.asarray(index.query(tr.s, tr.t), np.float32)
+    assert np.array_equal(got, want), scenario
+
+
+def test_zero_compiles_after_warmup(index, server):
+    # warmup compiled (at least) one executable per (lane, bucket)
+    # shape; the jit caches are shared per (engine, backend), so other
+    # servers over the same index may have added shapes — the serving
+    # guarantee is the delta, not the absolute count.
+    sizes = server.compile_cache_sizes()
+    if -1 in sizes.values():
+        pytest.skip("this jax does not expose jit cache sizes")
+    assert all(n >= len(BUCKETS) for n in sizes.values())
+    tr = make_trace("bursty", n=index.n, num_requests=400, rate_qps=5e4,
+                    seed=5)
+    server.serve_trace(tr)
+    # serving any trace triggers no further compiles.
+    assert server.compile_cache_sizes() == sizes
+
+
+def test_zero_compiles_exact_counts_on_private_index():
+    # on an index served by exactly one server the counts are exact:
+    # one compiled shape per (lane, bucket).
+    n, src, dst, w = gen.er_graph(200, 3.0, seed=4)
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=128, label_chunk=64))
+    srv = DistanceServer(idx, buckets=(8, 16), max_wait_ms=1.0)
+    sizes = srv.compile_cache_sizes()
+    if -1 in sizes.values():
+        pytest.skip("this jax does not expose jit cache sizes")
+    assert sizes == {"mu": 2, "full": 2}
+    srv.serve_trace(make_trace("uniform", n=n, num_requests=150, seed=5))
+    assert srv.compile_cache_sizes() == {"mu": 2, "full": 2}
+
+
+def test_cache_hits_on_repeated_traffic(index):
+    srv = DistanceServer(index, buckets=BUCKETS, max_wait_ms=1.0,
+                         cache_size=4096)
+    tr = make_trace("repeated", n=index.n, num_requests=400, pool=50, seed=6)
+    got = srv.serve_trace(tr)
+    snap = srv.metrics.snapshot()
+    assert snap["cache_hit_rate"] > 0.5
+    want = np.asarray(index.query(tr.s, tr.t), np.float32)
+    assert np.array_equal(got, want)
+
+
+def test_routing_sends_mu_exact_traffic_to_fast_lane(index, server):
+    no_core = mu_exact_mask(index)
+    # the sparse ER graph has small components that never reach the core
+    assert no_core[:index.n].any() and not no_core[:index.n].all()
+    s = np.flatnonzero(no_core[:index.n])[:4].astype(np.int64)
+    t = np.full_like(s, int(np.flatnonzero(~no_core[:index.n])[0]))
+    assert list(server.route(s, t)) == ["mu"] * len(s)
+    # both-core-reaching pairs must take the full path
+    cs = np.flatnonzero(~no_core[:index.n])[:4].astype(np.int64)
+    assert list(server.route(cs, cs[::-1])) == ["full"] * len(cs)
+
+
+def test_serve_metrics_snapshot_and_json(index, server):
+    tr = make_trace("uniform", n=index.n, num_requests=200, rate_qps=2e4,
+                    seed=7)
+    server.serve_trace(tr)
+    snap = server.metrics.snapshot()
+    for key in ("served", "qps_compute", "qps_offered", "latency_ms",
+                "batch_fill_ratio", "cache_hit_rate", "lanes",
+                "bucket_counts"):
+        assert key in snap
+    assert snap["served"] > 0 and snap["qps_compute"] > 0
+    assert 0 < snap["batch_fill_ratio"] <= 1
+    assert set(snap["lanes"]) == {"mu", "full"}
+    doc = json.loads(server.metrics.to_json(extra_field=1))
+    assert doc["extra_field"] == 1 and doc["served"] == snap["served"]
+
+
+def test_submit_pump_low_level_api(index):
+    srv = DistanceServer(index, buckets=BUCKETS, max_wait_ms=1.0,
+                         cache_size=16)
+    r1 = srv.submit(1, 2, now=0.0)
+    assert srv.take_result(r1) is None          # still queued
+    assert srv.pump(now=0.0) == 0               # inside the deadline
+    assert srv.pump(now=0.002) == 1             # deadline expired
+    v1 = srv.take_result(r1)
+    assert v1 is not None
+    r2 = srv.submit(1, 2, now=0.003)            # cache hit: immediate
+    assert srv.take_result(r2) == v1
+
+
+# -------------------------------------------------------------- registry
+def test_registry_hosts_multiple_named_indexes(index, tmp_path):
+    index.save(tmp_path / "g")
+    reg = IndexRegistry()
+    reg.register("live", index, buckets=BUCKETS, warmup=False)
+    reg.register("loaded", ISLabelIndex.load(tmp_path / "g"),
+                 buckets=BUCKETS, warmup=False)
+    assert reg.names() == ["live", "loaded"] and len(reg) == 2
+    tr = make_trace("uniform", n=index.n, num_requests=60, rate_qps=2e4,
+                    seed=8)
+    a = reg.get("live").serve_trace(tr)
+    b = reg.get("loaded").serve_trace(tr)
+    assert np.array_equal(a, b)
+    stats = reg.stats()
+    assert stats["live"]["served"] == stats["loaded"]["served"] == 60
+    reg.unregister("loaded")
+    assert "loaded" not in reg
+    with pytest.raises(KeyError):
+        reg.get("loaded")
+
+
+# ------------------------------------- save/load round trip × backends
+@pytest.mark.parametrize("backend", ["reference", "interpret"])
+def test_save_load_serve_round_trip_across_backends(index, tmp_path,
+                                                    backend):
+    """A loaded index served through the subsystem returns answers
+    bitwise-identical to the freshly built one, on every backend."""
+    index.save(tmp_path / "idx")
+    loaded = ISLabelIndex.load(tmp_path / "idx")
+    tr = make_trace("hotspot", n=index.n, num_requests=120, rate_qps=2e4,
+                    seed=9)
+    fresh = DistanceServer(index, buckets=(16,), max_wait_ms=1.0,
+                           backend=backend)
+    again = DistanceServer(loaded, buckets=(16,), max_wait_ms=1.0,
+                           backend=backend)
+    a = fresh.serve_trace(tr)
+    b = again.serve_trace(tr)
+    assert np.array_equal(a, b)
+    want = np.asarray(index.query(tr.s, tr.t), np.float32)
+    assert np.array_equal(a, want)
+
+
+def test_refresh_after_index_mutation(tmp_path):
+    # own tiny index: §8.3 mutators change it in place
+    n, src, dst, w = gen.er_graph(200, 3.0, seed=3)
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=128, label_chunk=64))
+    srv = DistanceServer(idx, buckets=(16,), max_wait_ms=1.0,
+                         cache_size=1024)
+    tr = make_trace("repeated", n=n, num_requests=80, pool=30, seed=10)
+    srv.serve_trace(tr)                      # populates the cache
+    u = int(np.flatnonzero(idx.level < idx.k)[0])
+    idx.delete_vertex(u)
+    srv.refresh()                            # drop cache, remask, rebind
+    assert len(srv.cache) == 0
+    got = srv.serve_trace(tr)
+    want = np.asarray(idx.query(tr.s, tr.t), np.float32)
+    assert np.array_equal(got, want)
+
+
+def test_wall_clock_pump_never_records_negative_latency(index):
+    srv = DistanceServer(index, buckets=(8,), max_wait_ms=1.0,
+                         cache_size=0)
+    srv.submit(1, 2, now=0.0)
+    srv.submit(3, 4, now=0.005)   # arrives after the oldest's deadline
+    assert srv.pump(now=0.005, force=True) == 2
+    assert all(lat >= 0 for lat in srv.metrics.latencies)
+
+
+def test_classify_accepts_scalars_and_device_arrays(index):
+    import jax.numpy as jnp
+    eng = index.engine
+    host = eng.classify(np.array([0, 1]), np.array([2, 3]), index.level,
+                        index.k)
+    dev = eng.classify(jnp.array([0, 1]), jnp.array([2, 3]),
+                       jnp.asarray(index.level), index.k)
+    assert np.array_equal(host, dev)
+    one = eng.classify(0, 2, index.level, index.k)
+    assert one.shape == (1,) and one[0] == host[0]
+    assert set(np.unique(host)) <= {1, 2, 3}
