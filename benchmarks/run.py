@@ -22,7 +22,8 @@ def main() -> None:
 
     from benchmarks import (bench_baselines, bench_construction,
                             bench_k_sweep, bench_kernels, bench_query,
-                            bench_serving, common, roofline_report)
+                            bench_serving, bench_shard, common,
+                            roofline_report)
     suites = {
         "table3_construction": bench_construction.main,
         "table4_5_query": bench_query.main,
@@ -30,6 +31,7 @@ def main() -> None:
         "table8_baselines": bench_baselines.main,
         "kernels": bench_kernels.main,
         "serving": bench_serving.main,
+        "shard": bench_shard.main,
         "roofline": roofline_report.main,
     }
     common.OUT_DIR = args.out

@@ -57,3 +57,18 @@ print(f"[audit] {k} sampled answers exact vs Dijkstra")
 types = idx.query_types(reqs[:, 0], reqs[:, 1])
 u, c = np.unique(types, return_counts=True)
 print("[mix] endpoint types:", dict(zip(u.tolist(), c.tolist())))
+
+# sharded lane (docs/SHARDING.md): partition the label table over the
+# available devices — one pmin collective per batch, answers bitwise
+from repro.shard import ShardedIndex
+
+n_shards = min(len(jax.devices()), 4)
+sidx = ShardedIndex.from_index(idx, n_shards)
+d_sh, _ = sidx.engine.batch_fn()(reqs[:BATCH, 0], reqs[:BATCH, 1])
+assert np.array_equal(np.asarray(d_sh), answers[:BATCH])
+print(f"[shard] {n_shards} shard(s), "
+      f"entries/shard={sidx.shard_entry_counts().tolist()}, "
+      f"one batch bitwise-equal to the unsharded index")
+if n_shards == 1:
+    print("[shard] hint: XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+          "simulates 4 devices on CPU")

@@ -11,6 +11,11 @@ below produce PartitionSpecs/NamedShardings. Conventions:
   params replicated (they are tiny).
 * RecSys: embedding-table rows over ``model``; batch over (pod, data);
   dense tower params replicated.
+* graph_index (IS-LABEL): label-partition blocks over the 1-D ``shard``
+  axis (``repro.shard``); everything whose consistency the core search
+  depends on — vertex-indexed rows, hierarchy levels, the core graph —
+  is replicated so the Equation-1 partial minima are the only
+  cross-shard traffic (one collective per batch; docs/SHARDING.md).
 """
 from __future__ import annotations
 
@@ -41,8 +46,23 @@ RECSYS_RULES = {
     "mlp_in": None, "mlp_out": None,
 }
 
+# IS-LABEL partitioned index (repro.shard.ShardedIndex): label blocks
+# are stacked [P, n+1, cap_s] with the leading label-partition axis laid
+# over the mesh's "shard" axis; per-vertex rows ("vertex"), label slots,
+# hierarchy levels, and the whole core graph stay replicated — the core
+# search runs shard-locally (top levels are replicated into every label
+# block) and only the Equation-1 partial minima cross shards.
+GRAPH_INDEX_RULES = {
+    "label_shard": "shard",   # one label partition per mesh slice
+    "vertex": None,           # [n+1] rows: every shard sees all vertices
+    "label_slot": None,       # padded per-shard label columns
+    "level": None,            # hierarchy levels: replicated
+    "core_vertex": None,      # core_pos / seed columns: replicated
+    "core_edge": None,        # G_k COO arrays: replicated
+}
+
 FAMILY_RULES = {"lm": LM_RULES, "gnn": GNN_RULES, "recsys": RECSYS_RULES,
-                "graph_index": {}}
+                "graph_index": GRAPH_INDEX_RULES}
 
 
 def spec_for_axes(axes: tuple, rules: dict) -> P:

@@ -11,6 +11,13 @@
   PYTHONPATH=src python -m repro.launch.serve --mode distance \
       --scenario hotspot --n 4096 --queries 4096 --buckets 64,256,1024
 
+  ``--shards N`` serves a ``repro.shard.ShardedIndex`` instead: the
+  label table is partitioned over N devices and every batch runs the
+  shard_map query path (docs/SHARDING.md). On CPU, simulate devices
+  with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. The
+  audit then checks the sharded serving path against the *unsharded*
+  index, end to end.
+
   ``--audit index`` (default) checks bitwise equality of every served
   answer against a direct ``ISLabelIndex.query`` pass; ``--audit
   dijkstra`` additionally checks a sample against the host Dijkstra
@@ -80,9 +87,18 @@ def serve_distance(args) -> int:
         if args.save:
             idx.save(args.save)
 
+    serve_idx = idx
+    if args.shards:
+        from repro.shard import ShardedIndex
+        serve_idx = ShardedIndex.from_index(
+            idx, args.shards, strategy=args.shard_strategy)
+        print(f"[serve-distance] sharded over {args.shards} device(s), "
+              f"strategy={args.shard_strategy}, "
+              f"entries/shard={serve_idx.shard_entry_counts().tolist()}")
+
     registry = IndexRegistry()
     server = registry.register(
-        args.index_name, idx,
+        args.index_name, serve_idx,
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         max_wait_ms=args.max_wait_ms, cache_size=args.cache,
         backend=args.backend or None)
@@ -152,6 +168,12 @@ def main():
                     default="index")
     ap.add_argument("--audit-sample", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=0,
+                    help=">0: serve a repro.shard.ShardedIndex over this "
+                         "many devices (simulate on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--shard-strategy", choices=["level", "hash"],
+                    default="level")
     ap.add_argument("--index-name", default="default")
     ap.add_argument("--save", default="")
     ap.add_argument("--load", default="")

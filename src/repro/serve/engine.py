@@ -27,6 +27,14 @@ served answer equals ``ISLabelIndex.query`` exactly, whichever lane it
 took. On indexes whose hierarchy consumed the whole graph
 (n_core == 0) every request is μ-exact and the full lane stays idle.
 
+Sharded lane. The server accepts a ``repro.shard.ShardedIndex``
+wherever it accepts an ``ISLabelIndex``: the same pre-warmed per-bucket
+entry points then run the shard_map query path (per-shard Equation 1 +
+shard-local core search, one collective per batch; docs/SHARDING.md),
+and every guarantee above — bitwise equality with the unsharded index,
+μ-routing soundness, zero compiles after warmup — holds unchanged. A
+registry can host sharded and unsharded graphs side by side.
+
 The engine is clock-driven and deterministic: callers pass ``now``
 (simulated or wall time) to ``submit``/``pump``. ``serve_trace`` replays
 a loadgen trace on its own clock — queue waits come from the trace
@@ -54,13 +62,19 @@ def mu_exact_mask(index) -> np.ndarray:
     For such v, stage 2's seed vector is all +inf, so for any pair with
     ``mask[s] or mask[t]`` the core term is +inf and μ alone is the
     exact (bitwise-identical) answer.
+
+    Accepts both label layouts: unsharded ``[n+1, l_cap]`` rows and a
+    ``ShardedIndex``'s stacked ``[P, n+1, cap_s]`` partition blocks
+    (core entries are replicated into every block, so reducing over the
+    shard axis too yields the identical mask).
     """
     n, k = index.n, index.k
     lev_pad = jnp.asarray(np.append(index.level, k + 1).astype(np.int32))
     entry_core = ((index.lbl_ids < n)
                   & (lev_pad[jnp.minimum(index.lbl_ids, n)] == k)
                   & jnp.isfinite(index.lbl_d))
-    return ~np.asarray(jnp.any(entry_core, axis=1))
+    axes = (0, 2) if entry_core.ndim == 3 else (1,)
+    return ~np.asarray(jnp.any(entry_core, axis=axes))
 
 
 class DistanceServer:
@@ -225,7 +239,8 @@ class DistanceServer:
         return {
             "name": self.name,
             "graph": {"n": self.index.n, "k": self.index.k,
-                      "n_core": int(self.index.stats.n_core)},
+                      "n_core": int(self.index.stats.n_core),
+                      "shards": int(getattr(self.index, "num_shards", 1))},
             "buckets": list(self.buckets),
             "max_wait_ms": self.max_wait_s * 1e3,
             "backend": self.backend or "auto",

@@ -1,0 +1,15 @@
+# repro.shard — partitioned IS-LABEL indexes with multi-device batched
+# querying: ancestor-partitioned label blocks (top hierarchy levels
+# replicated), shard_map query path with one collective per batch,
+# bitwise-equal to the unsharded QueryEngine. See docs/SHARDING.md.
+from repro.shard.partition import (REPLICATED, STRATEGIES, LabelBlocks,
+                                   assign_shards, partition_labels,
+                                   unpartition_labels)
+from repro.shard.query import ShardedQueryEngine
+from repro.shard.sharded_index import ShardedIndex, make_shard_mesh
+
+__all__ = [
+    "REPLICATED", "STRATEGIES", "LabelBlocks", "assign_shards",
+    "partition_labels", "unpartition_labels", "ShardedQueryEngine",
+    "ShardedIndex", "make_shard_mesh",
+]

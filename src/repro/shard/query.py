@@ -1,0 +1,162 @@
+"""`ShardedQueryEngine` — Algorithm 1 over P label partitions.
+
+Per batch, every shard runs both stages on its own block through the
+same kernel dispatch layer the unsharded `QueryEngine` uses:
+
+  stage 1  μ_p = Equation 1 over the shard's label block
+           (``label_intersect_dispatch``). Ancestor-partitioned blocks
+           make every (s, t) match shard-local, so μ = min_p μ_p.
+  stage 2  the label-seeded core relaxation, shard-locally: the top
+           hierarchy levels are replicated into every block
+           (partition.py), so each shard scatters the *complete* core
+           seed frontier and relaxes G_k to the identical fixed point —
+           bit-for-bit the unsharded ds/dt (the sentinel column may
+           hold different parked non-core entries per shard, but no
+           core edge reads or writes it and ``through_core`` excludes
+           it).
+
+  answer   ans_p = min(μ_p, through_core); one ``lax.pmin`` over the
+           mesh's shard axis — the batch's single collective — yields
+           min_p ans_p = min(μ, through_core) = ``QueryEngine.batch_fn``
+           bitwise (float min is exact under any grouping). ``rounds``
+           is identical on every shard (same seeds, same rounds), so it
+           leaves the shard_map as a replicated output, not a second
+           collective.
+
+Serving contract mirrors `QueryEngine`: ``batch_fn``/``mu_batch_fn``
+return jitted fixed-shape callables memoized per resolved backend with
+no host sync inside, and ``warmup`` pre-compiles every batch size so
+the serving path never triggers XLA compilation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dispatch import CoreRelaxer, label_intersect_dispatch
+from repro.core.query import QueryEngine
+from repro.kernels.backend import resolve_backend
+
+__all__ = ["ShardedQueryEngine"]
+
+
+class ShardedQueryEngine:
+    """Device-resident sharded query state + compiled entry points.
+
+    ``lbl_ids``/``lbl_d``: [P, n+1, cap_s] blocks laid out over the
+    mesh's ``shard`` axis (one partition per device slice); core state
+    (``core_pos`` and the local-index COO edges) replicated.
+    """
+
+    def __init__(self, lbl_ids, lbl_d, core_pos, core_local_edges, n: int,
+                 n_core: int, mesh, max_rounds: int = 0,
+                 backend: str = "auto"):
+        self.lbl_ids = lbl_ids
+        self.lbl_d = lbl_d
+        self.core_pos = core_pos
+        self.ce_src, self.ce_dst, self.ce_w = core_local_edges
+        self.n = n
+        self.n_core = n_core
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        self.num_shards = mesh.shape[self.axis]
+        self.cap = lbl_ids.shape[2]
+        self.max_rounds = max_rounds if max_rounds > 0 else max(n_core, 1)
+        self.backend = backend
+        self.relaxer = CoreRelaxer(self.ce_src, self.ce_dst, self.ce_w,
+                                   n_core) if n_core > 0 else None
+        self._batch_fns: dict = {}
+        self._mu_batch_fns: dict = {}
+
+    # ------------------------------------------------------ shard-local
+    # The unsharded seed scatter applied to one shard's label rows
+    # yields a frontier identical on every shard in the real columns
+    # (core ancestors are replicated into every block); non-core
+    # entries park in the sentinel column n_core, which stage 2
+    # ignores. Shared with QueryEngine so the bitwise contract cannot
+    # drift between the twins.
+    _seed = QueryEngine._seed
+
+    def _shard_block(self, blk_ids, blk_d, s, t, backend: str,
+                     mu_only: bool):
+        """Both stages on one shard's block. Runs inside shard_map; the
+        only collective is the final pmin over the shard axis."""
+        ids_s, d_s = blk_ids[s], blk_d[s]
+        ids_t, d_t = blk_ids[t], blk_d[t]
+        mu = label_intersect_dispatch(ids_s, d_s, ids_t, d_t, self.n, backend)
+        if mu_only:
+            return jax.lax.pmin(mu, self.axis)
+        if self.n_core == 0:
+            return jax.lax.pmin(mu, self.axis), jnp.int32(0)
+        seed_s = self._seed(ids_s, d_s)
+        seed_t = self._seed(ids_t, d_t)
+        ans, _, _, rounds = self.relaxer.run(seed_s, seed_t, mu,
+                                             self.max_rounds, backend)
+        return jax.lax.pmin(ans, self.axis), rounds
+
+    def _make_fn(self, backend: str, mu_only: bool):
+        blocks = P(self.axis, None, None)
+        out_specs = P() if mu_only else (P(), P())
+
+        def shard_fn(blk_ids, blk_d, s, t):
+            # the per-device block keeps a leading axis of size 1
+            return self._shard_block(blk_ids[0], blk_d[0], s, t,
+                                     backend, mu_only)
+
+        # rounds is bitwise-identical across shards (identical seeds in
+        # the real columns -> identical relaxation), so out_spec P()
+        # with check_rep=False just adopts the replicated value.
+        mapped = shard_map(shard_fn, mesh=self.mesh,
+                           in_specs=(blocks, blocks, P(), P()),
+                           out_specs=out_specs, check_rep=False)
+
+        def run(s, t):
+            return mapped(self.lbl_ids, self.lbl_d,
+                          jnp.asarray(s, jnp.int32), jnp.asarray(t, jnp.int32))
+        return jax.jit(run)
+
+    # ------------------------------------------------------- serving APIs
+    def batch_fn(self, backend: str | None = None):
+        """Jitted ``run(s, t) -> (ans float32[Q], rounds int32 scalar)``
+        — the sharded twin of ``QueryEngine.batch_fn`` (bitwise-equal
+        answers), memoized per resolved backend."""
+        backend = resolve_backend(self.backend if backend is None else backend)
+        if backend not in self._batch_fns:
+            self._batch_fns[backend] = self._make_fn(backend, mu_only=False)
+        return self._batch_fns[backend]
+
+    def mu_batch_fn(self, backend: str | None = None):
+        """Jitted Equation-1-only ``run(s, t) -> ans float32[Q]`` — the
+        μ-exact routed lane, sharded (per-shard partial μ + one pmin)."""
+        backend = resolve_backend(self.backend if backend is None else backend)
+        if backend not in self._mu_batch_fns:
+            self._mu_batch_fns[backend] = self._make_fn(backend, mu_only=True)
+        return self._mu_batch_fns[backend]
+
+    def query(self, s, t, backend: str | None = None):
+        """Batched distances (compiles per distinct batch shape; serving
+        goes through the pre-warmed bucketed ``batch_fn`` instead)."""
+        ans, _ = self.batch_fn(backend)(s, t)
+        return ans
+
+    def query_mu_only(self, s, t, backend: str | None = None):
+        return self.mu_batch_fn(backend)(s, t)
+
+    # warmup pre-compiles the *sharded* entry points per batch size
+    # (same contract, same {(path, size): seconds} report); classify
+    # reads no engine state — both reuse the QueryEngine logic.
+    warmup = QueryEngine.warmup
+    classify = QueryEngine.classify
+
+    def collective_count(self, batch_size: int = 8,
+                         backend: str | None = None) -> int:
+        """Number of cross-shard collectives in one full-path batch —
+        asserted to be exactly 1 in tests (the closed-jaxpr pmin count;
+        no per-shard host round trips by construction)."""
+        fn = self.batch_fn(backend)
+        z = jnp.zeros(int(batch_size), jnp.int32)
+        jaxpr = jax.make_jaxpr(lambda s, t: fn(s, t))(z, z)
+        text = str(jaxpr)
+        return sum(text.count(f"{prim}[") for prim in ("pmin", "pmax", "psum"))

@@ -1,0 +1,202 @@
+"""`ShardedIndex` — an IS-LABEL index hosted as P label partitions.
+
+  sidx = ShardedIndex.from_index(idx, num_shards=4)      # slice + place
+  sidx = ShardedIndex.build(n, src, dst, w, cfg, num_shards=4)
+  ans, rounds = sidx.engine.batch_fn()(s, t)   # bitwise == unsharded
+  sidx.save(dir); ShardedIndex.load(dir)
+  DistanceServer(sidx)                         # serving, sharded lane
+
+No device holds the full label table: shard p's block carries its
+ancestor partition plus the replicated top hierarchy levels
+(``partition.py``), stacked [P, n+1, cap_s] and laid over a 1-D
+``jax.sharding.Mesh`` shard axis via the ``"graph_index"`` logical-axis
+rules in ``repro.distributed.sharding`` (label_shard → mesh shard;
+vertex rows, levels, and the core graph replicated). Queries run
+through ``ShardedQueryEngine`` (shard_map + one pmin per batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.config import BuildStats, IndexConfig
+from repro.distributed.sharding import FAMILY_RULES, tree_shardings
+from repro.shard.partition import (LabelBlocks, assign_shards,
+                                   partition_labels)
+from repro.shard.query import ShardedQueryEngine
+
+# logical axes of every placed leaf, resolved through the family rules
+_AXES_TREE = {
+    "lbl_ids": ("label_shard", "vertex", "label_slot"),
+    "lbl_d": ("label_shard", "vertex", "label_slot"),
+    "core_pos": ("vertex",),
+    "ce_src": ("core_edge",),
+    "ce_dst": ("core_edge",),
+    "ce_w": ("core_edge",),
+}
+
+
+def make_shard_mesh(num_shards: int) -> Mesh:
+    """1-D mesh over the first ``num_shards`` local devices."""
+    devs = jax.devices()
+    if num_shards > len(devs):
+        raise ValueError(
+            f"num_shards={num_shards} exceeds the {len(devs)} available "
+            f"device(s); simulate more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return Mesh(np.asarray(devs[:num_shards]), ("shard",))
+
+
+@dataclasses.dataclass
+class ShardedIndex:
+    """Duck-types the `ISLabelIndex` surface the serving layer uses
+    (n/k/level/stats/engine/query), with partitioned label state."""
+    n: int
+    k: int
+    num_shards: int
+    strategy: str
+    replicate_top: int
+    cfg: IndexConfig
+    level: np.ndarray            # int32[n] (host, replicated concern)
+    shard_of: np.ndarray         # int32[n+1], REPLICATED = -1
+    entries_per_shard: np.ndarray  # int64[P]: owned+replicated per shard
+    # per-shard label blocks [P, n+1, cap_s]; ids/d sharded over the
+    # mesh, pred host-only (queries never read it — like the up-edge
+    # matrix it exists for path reconstruction and save/load)
+    lbl_ids: jnp.ndarray
+    lbl_d: jnp.ndarray
+    lbl_pred: np.ndarray
+    # core graph (host, global ids) + host core position map
+    core_ids: np.ndarray
+    core_pos_host: np.ndarray
+    core_src: np.ndarray
+    core_dst: np.ndarray
+    core_w: np.ndarray
+    mesh: Mesh
+    engine: ShardedQueryEngine
+    stats: BuildStats
+
+    # ---------------------------------------------------------- builders
+    @staticmethod
+    def build(n, src, dst, w, cfg: IndexConfig = IndexConfig(), *,
+              num_shards: int = 1, strategy: str = "level",
+              replicate_top: int = 1, mesh: Mesh | None = None
+              ) -> "ShardedIndex":
+        from repro.core.index import ISLabelIndex
+        idx = ISLabelIndex.build(n, src, dst, w, cfg)
+        return ShardedIndex.from_index(idx, num_shards, strategy=strategy,
+                                       replicate_top=replicate_top, mesh=mesh)
+
+    @staticmethod
+    def from_index(index, num_shards: int, *, strategy: str = "level",
+                   replicate_top: int = 1, mesh: Mesh | None = None
+                   ) -> "ShardedIndex":
+        """Partition an existing `ISLabelIndex` and place it on devices."""
+        shard_of = assign_shards(index.level, index.k, num_shards,
+                                 strategy=strategy,
+                                 replicate_top=replicate_top)
+        blocks = partition_labels(index.lbl_ids, index.lbl_d, index.lbl_pred,
+                                  index.n, shard_of, num_shards)
+        return ShardedIndex._assemble(
+            n=index.n, k=index.k, cfg=index.cfg, level=index.level,
+            shard_of=shard_of, blocks=blocks, core_ids=index.core_ids,
+            core_pos=index.core_pos_host, core_src=index.core_src,
+            core_dst=index.core_dst, core_w=index.core_w,
+            stats=index.stats, strategy=strategy,
+            replicate_top=replicate_top, mesh=mesh)
+
+    @staticmethod
+    def _assemble(*, n, k, cfg, level, shard_of, blocks: LabelBlocks,
+                  core_ids, core_pos, core_src, core_dst, core_w, stats,
+                  strategy, replicate_top, mesh) -> "ShardedIndex":
+        num_shards = blocks.num_shards
+        if mesh is None:
+            mesh = make_shard_mesh(num_shards)
+        axis = mesh.axis_names[0]
+        if mesh.shape[axis] != num_shards:
+            raise ValueError(f"mesh axis {axis!r} has size "
+                             f"{mesh.shape[axis]}, need {num_shards}")
+        shardings = tree_shardings(_AXES_TREE, FAMILY_RULES["graph_index"],
+                                   mesh)
+        host = {
+            "lbl_ids": blocks.ids, "lbl_d": blocks.d,
+            "core_pos": core_pos,
+            "ce_src": core_pos[core_src].astype(np.int32),
+            "ce_dst": core_pos[core_dst].astype(np.int32),
+            "ce_w": np.asarray(core_w, np.float32),
+        }
+        dev = {name: jax.device_put(arr, shardings[name])
+               for name, arr in host.items()}
+        engine = ShardedQueryEngine(
+            dev["lbl_ids"], dev["lbl_d"], dev["core_pos"],
+            (dev["ce_src"], dev["ce_dst"], dev["ce_w"]),
+            n=n, n_core=len(core_ids), mesh=mesh,
+            max_rounds=cfg.max_relax_rounds, backend=cfg.query_backend)
+        return ShardedIndex(
+            n=n, k=k, num_shards=num_shards, strategy=strategy,
+            replicate_top=replicate_top, cfg=cfg, level=np.asarray(level),
+            shard_of=shard_of, entries_per_shard=np.asarray(blocks.entries),
+            lbl_ids=dev["lbl_ids"], lbl_d=dev["lbl_d"],
+            lbl_pred=np.asarray(blocks.pred), core_ids=np.asarray(core_ids),
+            core_pos_host=np.asarray(core_pos),
+            core_src=np.asarray(core_src), core_dst=np.asarray(core_dst),
+            core_w=np.asarray(core_w), mesh=mesh, engine=engine, stats=stats)
+
+    # ------------------------------------------------------------- query
+    def query(self, s, t, backend: str | None = None):
+        """Exact batched distances — bitwise-equal to the unsharded
+        ``ISLabelIndex.query`` on every backend."""
+        return self.engine.query(s, t, backend)
+
+    def query_host(self, s, t) -> np.ndarray:
+        return np.asarray(self.query(np.atleast_1d(s), np.atleast_1d(t)))
+
+    def query_types(self, s, t):
+        return self.engine.classify(s, t, self.level, self.k)
+
+    def shard_entry_counts(self) -> np.ndarray:
+        """int64[P]: label entries held per shard (owned + replicated),
+        recorded at partition time — no device round trip."""
+        return self.entries_per_shard.copy()
+
+    # ---------------------------------------------------------------- io
+    def save(self, path) -> None:
+        p = Path(path)
+        p.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(
+            p / "shards.npz", level=self.level, shard_of=self.shard_of,
+            lbl_ids=np.asarray(self.lbl_ids), lbl_d=np.asarray(self.lbl_d),
+            lbl_pred=np.asarray(self.lbl_pred), core_ids=self.core_ids,
+            core_pos=self.core_pos_host, core_src=self.core_src,
+            core_dst=self.core_dst, core_w=self.core_w)
+        meta = {"n": self.n, "k": self.k, "num_shards": self.num_shards,
+                "strategy": self.strategy,
+                "replicate_top": self.replicate_top,
+                "cfg": dataclasses.asdict(self.cfg),
+                "stats": dataclasses.asdict(self.stats)}
+        (p / "meta.json").write_text(json.dumps(meta))
+
+    @staticmethod
+    def load(path, mesh: Mesh | None = None) -> "ShardedIndex":
+        p = Path(path)
+        meta = json.loads((p / "meta.json").read_text())
+        z = np.load(p / "shards.npz")
+        blocks = LabelBlocks(
+            ids=z["lbl_ids"], d=z["lbl_d"], pred=z["lbl_pred"],
+            entries=(z["lbl_ids"][:, :meta["n"]] < meta["n"])
+            .sum(axis=(1, 2)).astype(np.int64))
+        idx = ShardedIndex._assemble(
+            n=meta["n"], k=meta["k"], cfg=IndexConfig(**meta["cfg"]),
+            level=z["level"], shard_of=z["shard_of"], blocks=blocks,
+            core_ids=z["core_ids"], core_pos=z["core_pos"],
+            core_src=z["core_src"], core_dst=z["core_dst"],
+            core_w=z["core_w"], stats=BuildStats(**meta["stats"]),
+            strategy=meta["strategy"], replicate_top=meta["replicate_top"],
+            mesh=mesh)
+        return idx
