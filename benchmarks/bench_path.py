@@ -1,0 +1,131 @@
+"""Path-retrieval benchmark: batch sizes × hop_cap tiers through the
+``repro.paths`` engine, every cell gated on exactness — each
+reconstructed path must have the queried endpoints, consist of real
+original-graph edges, and its weight sum must equal the served distance
+bitwise (integer-valued generator weights make float sums exact). A
+sample of endpoints is additionally verified against the host Dijkstra
+oracle.
+
+Also times the scalar host oracle (``ISLabelIndex.shortest_path``) on a
+sample to report the batched engine's speedup — the acceptance bar is
+>= 10x at batch >= 64. Results accumulate in ``BENCH_path.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_path [--full] [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _sweep(full: bool):
+    if full:
+        return (64, 256, 1024), (64, 128, 256)
+    return (64, 256), (64, 128)
+
+
+def main(full: bool = False) -> None:
+    import jax
+
+    from repro.core import ISLabelIndex, IndexConfig, ref
+    from repro.graphs import generators as gen
+    from repro.paths import check_path_batch, edge_weight_map
+
+    if full:
+        n, src, dst, w = gen.rmat_graph(14, avg_deg=6.0, seed=1)
+        kind = "rmat14"
+    else:
+        n, src, dst, w = gen.er_graph(1 << 10, 2.2, seed=2)
+        kind = "er10"
+    idx = ISLabelIndex.build(n, src, dst, w, IndexConfig(l_cap=512))
+    engine = idx.path_engine()
+    edges = edge_weight_map(src, dst, w)
+    rng = np.random.default_rng(0)
+
+    # scalar host-oracle baseline (the pre-batching hot path)
+    n_scalar = 32
+    ss = rng.integers(0, n, n_scalar)
+    tt = rng.integers(0, n, n_scalar)
+    idx.shortest_path(int(ss[0]), int(tt[0]))        # warm host caches
+    t0 = time.perf_counter()
+    for a, b in zip(ss, tt):
+        idx.shortest_path(int(a), int(b))
+    scalar_us = (time.perf_counter() - t0) / n_scalar * 1e6
+    common.row("path", "scalar-oracle", scalar_us, batch=1)
+
+    batches, hop_caps = _sweep(full)
+    results, gate_passed, speedup_at_64 = [], True, 0.0
+    for hop_cap in hop_caps:
+        for batch in batches:
+            s = rng.integers(0, n, batch).astype(np.int32)
+            t = rng.integers(0, n, batch).astype(np.int32)
+            fn = engine.path_batch_fn(hop_cap)
+            sec, out = common.timeit(fn, s, t)
+            out = jax.block_until_ready(out)
+            # exactness gate 1: dist bitwise vs the query hot path
+            want = np.asarray(idx.query(s, t), np.float32)
+            dist_exact = np.array_equal(np.asarray(out.dist), want,
+                                        equal_nan=True)
+            # exactness gate 2: every non-overflowed path valid, weight
+            # sum bitwise-equal to the served distance
+            rep = check_path_batch(edges, s, t, out)
+            # gate 3: sampled endpoints against the Dijkstra oracle
+            k = min(batch, 64)
+            srcs, inv = np.unique(s[:k], return_inverse=True)
+            oracle = ref.dijkstra_oracle(n, src, dst, w, srcs)
+            want_o = oracle[inv, t[:k]].astype(np.float32)
+            fin = np.isfinite(want_o)
+            got_k = np.asarray(out.dist)[:k]
+            oracle_ok = bool(np.allclose(got_k[fin], want_o[fin])
+                             and not np.isfinite(got_k[~fin]).any())
+            cell_ok = (dist_exact and oracle_ok
+                       and not rep["violations"])
+            gate_passed &= cell_ok
+            us_q = sec * 1e6 / batch
+            speedup = scalar_us / us_q if us_q else 0.0
+            if batch == 64 and speedup > speedup_at_64:
+                speedup_at_64 = speedup
+            common.row("path", f"b{batch}-h{hop_cap}", us_q,
+                       batch=batch, hop_cap=hop_cap,
+                       overflowed=rep["overflowed"],
+                       speedup=round(speedup, 1), exact=cell_ok)
+            results.append({
+                "batch": batch, "hop_cap": hop_cap,
+                "us_per_path": us_q, "speedup_vs_scalar": speedup,
+                "checked": rep["checked"],
+                "overflowed": rep["overflowed"],
+                "violations": rep["violations"][:10],
+                "dist_bitwise_vs_query": bool(dist_exact),
+                "oracle_sample_ok": oracle_ok,
+                "exact": bool(cell_ok),
+            })
+    common.write_json("path", {
+        "graph": {"kind": kind, "n": int(n), "m": int(len(src))},
+        "index": {"k": idx.k, "n_core": int(idx.stats.n_core),
+                  "label_entries": int(idx.stats.label_entries)},
+        "scalar_oracle_us": scalar_us,
+        "speedup_at_batch64": speedup_at_64,
+        "full": full,
+        "gate": ("endpoints + real edges + weight sum bitwise == served "
+                 "distance; dist bitwise vs QueryEngine; Dijkstra sample"),
+        "gate_passed": bool(gate_passed),
+        "results": results,
+    })
+    # fail after writing so a broken sweep still records which cells
+    # diverged in BENCH_path.json
+    if not gate_passed:
+        bad = [(r["batch"], r["hop_cap"]) for r in results if not r["exact"]]
+        raise AssertionError(f"path exactness gate failed for cells {bad}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=".")
+    args = ap.parse_args()
+    common.OUT_DIR = args.out
+    main(full=args.full)

@@ -3,15 +3,22 @@
 machine-readable ``BENCH_<table>.json`` per suite (``--out``, default
 cwd) so the perf trajectory accumulates across PRs.
 
+A suite that raises (including an exactness-gate AssertionError, e.g.
+``bench_shard``'s bitwise gate or ``bench_path``'s path validation)
+is reported as an ERROR row and the driver exits nonzero — CI's
+``bench-smoke`` job relies on this to fail on any gate violation while
+still uploading every ``BENCH_*.json`` produced.
+
   PYTHONPATH=src python -m benchmarks.run [--full] [--only tableX]
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import traceback
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale graphs (slow)")
@@ -21,9 +28,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_baselines, bench_construction,
-                            bench_k_sweep, bench_kernels, bench_query,
-                            bench_serving, bench_shard, common,
-                            roofline_report)
+                            bench_k_sweep, bench_kernels, bench_path,
+                            bench_query, bench_serving, bench_shard,
+                            common, roofline_report)
     suites = {
         "table3_construction": bench_construction.main,
         "table4_5_query": bench_query.main,
@@ -32,10 +39,12 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "serving": bench_serving.main,
         "shard": bench_shard.main,
+        "path": bench_path.main,
         "roofline": roofline_report.main,
     }
     common.OUT_DIR = args.out
     print("table,name,us_per_call,derived")
+    failed = []
     for name, fn in suites.items():
         if args.only and args.only not in name:
             continue
@@ -44,9 +53,13 @@ def main() -> None:
         except Exception as e:
             print(f"{name},ERROR,0,{type(e).__name__}:{e}")
             traceback.print_exc()
+            failed.append(name)
     for path in common.flush_rows(args.out):
         print(f"# wrote {path}")
+    if failed:
+        print(f"# FAILED suites: {','.join(failed)}")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

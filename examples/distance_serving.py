@@ -72,3 +72,17 @@ print(f"[shard] {n_shards} shard(s), "
 if n_shards == 1:
     print("[shard] hint: XLA_FLAGS=--xla_force_host_platform_device_count=4 "
           "simulates 4 devices on CPU")
+
+# path serving (docs/PATHS.md): full shortest-path retrieval at batch
+# rates — every served path is edge-validated and its weight sum equals
+# the served distance
+from repro.paths import check_path_batch, edge_weight_map
+
+p_s, p_t = reqs[:BATCH, 0], reqs[:BATCH, 1]
+t2 = time.time()
+out = idx.path_engine().path_batch_fn(hop_cap=128)(p_s, p_t)
+out = jax.block_until_ready(out)
+rep = check_path_batch(edge_weight_map(src, dst, w), p_s, p_t, out)
+assert not rep["violations"], rep["violations"][:3]
+print(f"[paths] {rep['checked']} shortest paths reconstructed + validated "
+      f"in {time.time() - t2:.2f}s ({rep['overflowed']} over hop_cap)")

@@ -115,6 +115,19 @@ class DiISLabelIndex:
     core_pos: np.ndarray
     core_edges: tuple   # fwd local (src, dst, w)
     n_core: int
+    # host state for §8.1/§8.2 path reconstruction: the out/in
+    # up-adjacency matrices ((ids, w, via) triples) and the core COO in
+    # global ids with its via bookkeeping
+    up_out: tuple = None
+    up_in: tuple = None
+    core_host: tuple = None     # (src, dst, w, via) global ids
+    # lazy per-call-cost hoists (host label copies, sorted core
+    # adjacencies) — the directed index has no in-place mutators, so
+    # these never need invalidation
+    _host_lbl: dict = dataclasses.field(default=None, init=False,
+                                        repr=False, compare=False)
+    _core_adj: dict = dataclasses.field(default=None, init=False,
+                                        repr=False, compare=False)
 
     @staticmethod
     def build(n, src, dst, w, cfg: IndexConfig = IndexConfig()):
@@ -164,7 +177,7 @@ class DiISLabelIndex:
                 break
         level[level == 0] = k
 
-        ce_s, ce_d, ce_w, _ = gcsr.to_host_coo(
+        ce_s, ce_d, ce_w, ce_v = gcsr.to_host_coo(
             gcsr.EdgeList(cs, cd, cw, cv, n_nodes=n))
 
         def labels_for(direction):
@@ -186,7 +199,9 @@ class DiISLabelIndex:
             core_pos=core_pos,
             core_edges=(jnp.asarray(core_pos[ce_s]),
                         jnp.asarray(core_pos[ce_d]), jnp.asarray(ce_w)),
-            n_core=len(core_ids))
+            n_core=len(core_ids),
+            up_out=ups["out"], up_in=ups["in"],
+            core_host=(ce_s, ce_d, ce_w, ce_v))
 
     def query(self, s, t):
         """Directed distances dist(s -> t), batched."""
@@ -219,3 +234,114 @@ class DiISLabelIndex:
 
     def reachable(self, s, t):
         return np.isfinite(self.query_host(s, t))
+
+    # ------------------------------------------------------- §8.1/§8.2 paths
+    def _label_host(self, family: str):
+        """Cached host copies of one label family's (ids, d, pred)."""
+        if self._host_lbl is None:
+            self._host_lbl = {}
+        if family not in self._host_lbl:
+            lbl = self.out_lbl if family == "out" else self.in_lbl
+            self._host_lbl[family] = tuple(np.asarray(a) for a in lbl)
+        return self._host_lbl[family]
+
+    def _core_adjacency(self, reverse: bool = False):
+        """Cached src-sorted core adjacency, forward or reversed."""
+        if self._core_adj is None:
+            self._core_adj = {}
+        if reverse not in self._core_adj:
+            from repro.core.ref import sorted_adjacency
+            ce_s, ce_d, ce_w, ce_v = self.core_host
+            src, dst = (ce_d, ce_s) if reverse else (ce_s, ce_d)
+            self._core_adj[reverse] = sorted_adjacency(self.n, src, dst,
+                                                       ce_w, ce_v)
+        return self._core_adj[reverse]
+
+    # Directed via expansion: an augmenting edge (a, b) through a
+    # removed c stands for the 2-path a -> c -> b, so a sits in c's
+    # *in*-adjacency and b in its *out*-adjacency.
+    def _expand_dir(self, a: int, b: int, via: int) -> list[int]:
+        """Original-graph vertices [a..b) of the directed edge a -> b."""
+        if via < 0:
+            return [a]
+        sa = self._slot(self.up_in, via, a)
+        sb = self._slot(self.up_out, via, b)
+        if sa < 0 or sb < 0:
+            return [a]
+        return (self._expand_dir(a, via, int(self.up_in[2][via, sa]))
+                + self._expand_dir(via, b, int(self.up_out[2][via, sb])))
+
+    @staticmethod
+    def _slot(up, v: int, u: int) -> int:
+        slots = np.flatnonzero(up[0][v] == u)
+        return int(slots[0]) if len(slots) else -1
+
+    def _chase(self, v: int, x: int, family: str) -> list[int]:
+        """Real-graph vertices of the label path between v and x.
+
+        ``family="out"``: returns [v..x) of the path v -> x (chasing
+        out-labels forward). ``family="in"``: returns [x..v) of the
+        path x -> v (every in-label hop is a real edge INTO v).
+        """
+        if v == x:
+            return []
+        lbl = self._label_host(family)
+        up = self.up_out if family == "out" else self.up_in
+        row = lbl[0][v]
+        j = int(np.searchsorted(row, x))
+        if j >= len(row) or row[j] != x:
+            raise ValueError(f"{x} is not a {family}-ancestor of {v}")
+        u = int(lbl[2][v][j])
+        slot = self._slot(up, v, u)
+        if u < 0 or slot < 0:
+            raise ValueError("inconsistent pred chain")
+        via = int(up[2][v, slot])
+        if family == "out":
+            return self._expand_dir(v, u, via) + self._chase(u, x, "out")
+        return self._chase(u, x, "in") + self._expand_dir(u, v, via)
+
+    def shortest_path(self, s: int, t: int):
+        """Return (dist(s -> t), [s..t] vertex list in the original
+        directed graph) — the directed analogue of
+        ``ISLabelIndex.shortest_path``."""
+        dist = float(self.query_host([s], [t])[0])
+        if not np.isfinite(dist):
+            return dist, []
+        from repro.core.ref import host_meet
+        out_h, in_h = self._label_host("out"), self._label_host("in")
+        mu, w = host_meet(out_h[0][s], out_h[1][s], in_h[0][t], in_h[1][t],
+                          self.n)
+        if mu <= dist + 1e-6 and w >= 0:
+            return dist, (self._chase(s, w, "out")
+                          + self._chase(t, w, "in") + [t])
+        return dist, self._core_path_dir(s, t)
+
+    def _core_path_dir(self, s: int, t: int) -> list[int]:
+        from repro.core.ref import seeded_sssp
+
+        def seeds(family, v):
+            lbl = self._label_host(family)
+            row_i, row_d = lbl[0][v], lbl[1][v]
+            return {int(u): float(d) for u, d in zip(row_i, row_d)
+                    if int(u) < self.n and self.level[int(u)] == self.k}
+
+        ds, ps = seeded_sssp(seeds("out", s),
+                             *self._core_adjacency(reverse=False))
+        dt, pt = seeded_sssp(seeds("in", t),
+                             *self._core_adjacency(reverse=True))
+        meet = min((ds.get(u, np.inf) + dt.get(u, np.inf), u)
+                   for u in ds)[1]
+        # forward side: unwind par edges (u -> v) back to the s seed
+        fwd, v = [], meet
+        while ps[v][0] is not None:
+            u, via = ps[v]
+            fwd = self._expand_dir(u, v, via) + fwd
+            v = u
+        left = self._chase(s, v, "out") + fwd
+        # backward side: par edges are real (v -> u), already forward
+        bwd, v = [], meet
+        while pt[v][0] is not None:
+            u, via = pt[v]
+            bwd = bwd + self._expand_dir(v, u, via)
+            v = u
+        return left + bwd + self._chase(t, v, "in") + [t]

@@ -19,7 +19,7 @@ import numpy as np
 from repro.core.config import BuildStats, IndexConfig
 from repro.core.hierarchy import Hierarchy, build_hierarchy
 from repro.core.labeling import build_labels
-from repro.core.query import QueryEngine, label_intersect_mu
+from repro.core.query import QueryEngine
 
 
 @dataclasses.dataclass
@@ -45,6 +45,15 @@ class ISLabelIndex:
     core_via: np.ndarray
     engine: QueryEngine
     stats: BuildStats
+    # lazy caches (hoisted out of the per-call path of the host oracle
+    # so it is usable as the audit reference inside loadgen replays;
+    # invalidated by _refresh_device on every in-place mutation)
+    _host_labels: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _core_adj: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _paths: object = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -98,6 +107,47 @@ class ISLabelIndex:
         return self.engine.classify(s, t, self.level, self.k)
 
     # ------------------------------------------------------------- §8.1 paths
+    def _label_host(self):
+        """Cached host copies of the label arrays (ids, d, pred).
+
+        Hoisted out of the per-call path: ``shortest_path`` used to
+        re-materialize device rows via ``jnp.array([s])`` on every
+        invocation, which made the oracle unusable as the audit
+        reference inside loadgen replays."""
+        if self._host_labels is None:
+            self._host_labels = (np.asarray(self.lbl_ids),
+                                 np.asarray(self.lbl_d),
+                                 np.asarray(self.lbl_pred))
+        return self._host_labels
+
+    def _core_adjacency(self):
+        """Cached src-sorted core adjacency (indptr, dst, w, via) —
+        previously re-sorted inside every ``_core_path`` call."""
+        if self._core_adj is None:
+            from repro.core.ref import sorted_adjacency
+            self._core_adj = sorted_adjacency(
+                self.n, self.core_src, self.core_dst, self.core_w,
+                self.core_via)
+        return self._core_adj
+
+    def path_engine(self):
+        """Batched device-side path reconstruction (``repro.paths``,
+        docs/PATHS.md). Memoized per index generation — in-place
+        mutations invalidate it alongside the query engine."""
+        if self._paths is None:
+            from repro.paths import PathEngine
+            self._paths = PathEngine.from_index(self)
+        return self._paths
+
+    def shortest_paths(self, s, t, hop_cap: int = 256,
+                       backend: str | None = None):
+        """Batched shortest paths through the jitted ``PathEngine`` —
+        the serving-rate replacement for the scalar ``shortest_path``
+        oracle. Returns ``(dist float32[Q], list of vertex lists,
+        ok bool[Q])``; hop_cap escalates automatically on overflow."""
+        return self.path_engine().paths(s, t, hop_cap=hop_cap,
+                                        backend=backend)
+
     def _up_slot(self, v: int, u: int):
         row = self.up_ids[v]
         slots = np.flatnonzero(row == u)
@@ -121,11 +171,12 @@ class ISLabelIndex:
         """Path v -> x following the label pred chain (x an ancestor of v)."""
         if v == x:
             return [v]
-        row = np.asarray(self.lbl_ids[v])
+        ids_h, _, pred_h = self._label_host()
+        row = ids_h[v]
         j = np.searchsorted(row, x)
         if j >= len(row) or row[j] != x:
             raise ValueError(f"{x} is not an ancestor of {v}")
-        u = int(np.asarray(self.lbl_pred[v])[j])
+        u = int(pred_h[v][j])
         if u < 0:
             raise ValueError("inconsistent pred chain")
         slot = self._up_slot(v, u)
@@ -137,13 +188,12 @@ class ISLabelIndex:
         dist = float(self.query_host([s], [t])[0])
         if not np.isfinite(dist):
             return dist, []
-        # meeting vertex: best label-intersection ancestor, or best core pair
-        ids_s, d_s = self.lbl_ids[jnp.array([s])], self.lbl_d[jnp.array([s])]
-        ids_t, d_t = self.lbl_ids[jnp.array([t])], self.lbl_d[jnp.array([t])]
-        mu, meet = label_intersect_mu(ids_s, d_s, ids_t, d_t, self.n,
-                                      self.cfg.l_cap)
-        if float(mu[0]) <= dist + 1e-6 and int(meet[0]) < self.n:
-            w = int(meet[0])
+        # meeting vertex: best label-intersection ancestor, or best core
+        # pair — host-side over the cached label copies (Equation 1)
+        from repro.core.ref import host_meet
+        ids_h, d_h, _ = self._label_host()
+        mu, w = host_meet(ids_h[s], d_h[s], ids_h[t], d_h[t], self.n)
+        if mu <= dist + 1e-6 and w >= 0:
             left = self._label_path(s, w)
             right = self._label_path(t, w)
             return dist, left + right[::-1][1:]
@@ -152,47 +202,22 @@ class ISLabelIndex:
         return dist, path
 
     def _core_path(self, s: int, t: int, dist: float):
-        import heapq
-        n_core = len(self.core_ids)
+        from repro.core.ref import seeded_sssp
+        ids_h, d_h, _ = self._label_host()
         seeds = {}
         for side, v in ((0, s), (1, t)):
-            row_i = np.asarray(self.lbl_ids[v])
-            row_d = np.asarray(self.lbl_d[v])
+            row_i, row_d = ids_h[v], d_h[v]
             sd = {}
             for i, u in enumerate(row_i):
                 u = int(u)
                 if u < self.n and self.level[u] == self.k:
                     sd[u] = float(row_d[i])
             seeds[side] = sd
-        # adjacency of core in global ids
-        order = np.argsort(self.core_src, kind="stable")
-        cs, cd, cw = (self.core_src[order], self.core_dst[order],
-                      self.core_w[order])
-        cvia = self.core_via[order]
-        indptr = np.zeros(self.n + 1, np.int64)
-        np.add.at(indptr, cs + 1, 1)
-        indptr = np.cumsum(indptr)
-
-        def sssp(sd):
-            dd, par = dict(sd), {u: (None, -1) for u in sd}
-            pq = [(d, u) for u, d in sd.items()]
-            heapq.heapify(pq)
-            done = set()
-            while pq:
-                du, u = heapq.heappop(pq)
-                if u in done:
-                    continue
-                done.add(u)
-                for e in range(indptr[u], indptr[u + 1]):
-                    v2, alt = int(cd[e]), du + float(cw[e])
-                    if alt < dd.get(v2, np.inf):
-                        dd[v2] = alt
-                        par[v2] = (u, int(cvia[e]))
-                        heapq.heappush(pq, (alt, v2))
-            return dd, par
-
-        ds, ps = sssp(seeds[0])
-        dt, pt = sssp(seeds[1])
+        # adjacency of core in global ids (cached, src-sorted);
+        # undirected core: the same adjacency serves both directions
+        adj = self._core_adjacency()
+        ds, ps = seeded_sssp(seeds[0], *adj)
+        dt, pt = seeded_sssp(seeds[1], *adj)
         meet = min((ds.get(u, np.inf) + dt.get(u, np.inf), u) for u in ds)[1]
 
         def unwind(par, sd, v, side):
@@ -313,6 +338,11 @@ class ISLabelIndex:
         self.lbl_ids = jnp.asarray(ids_h)
         self.lbl_d = jnp.asarray(d_h)
         self.lbl_pred = jnp.asarray(pred_h)
+        # invalidate the host-oracle and path-engine caches: labels
+        # and/or the core edge arrays just changed
+        self._host_labels = None
+        self._core_adj = None
+        self._paths = None
         core_ids = np.flatnonzero(self.level == self.k).astype(np.int32)
         n_core = len(core_ids)
         core_pos = np.full(self.n + 1, n_core, np.int32)

@@ -88,6 +88,52 @@ def bidijkstra(n, src, dst, w, s, t):
     return mu
 
 
+def host_meet(row_s, d_s, row_t, d_t, n):
+    """Host Equation 1 over two sorted label rows: returns
+    ``(mu, meet_id)`` with ``meet_id = -1`` when the labels share no
+    finite ancestor. Shared by the undirected and directed host path
+    oracles so their tie rule (argmin over the s-row order, matching
+    the device engine) cannot drift apart."""
+    pos = np.minimum(np.searchsorted(row_t, row_s), len(row_t) - 1)
+    hit = (row_t[pos] == row_s) & (row_s < n)
+    tot = np.where(hit, d_s + d_t[pos], np.inf)
+    j = int(np.argmin(tot))
+    return float(tot[j]), (int(row_s[j]) if hit[j] else -1)
+
+
+def sorted_adjacency(n, src, dst, w, via):
+    """Src-sorted CSR-ish adjacency ``(indptr, dst, w, via)`` — the
+    representation both host path oracles cache per index."""
+    order = np.argsort(src, kind="stable")
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, np.asarray(src)[order] + 1, 1)
+    return (np.cumsum(indptr), np.asarray(dst)[order],
+            np.asarray(w)[order], np.asarray(via)[order])
+
+
+def seeded_sssp(seeds, indptr, nbr, w, via):
+    """Dijkstra from a multi-source seed dict over a sorted adjacency.
+    Returns ``(dist dict, parent dict)`` with ``parent[v] = (u, via)``
+    (``(None, -1)`` at seeds) — the label-seeded core search both host
+    path oracles unwind."""
+    dd, par = dict(seeds), {u: (None, -1) for u in seeds}
+    pq = [(d, u) for u, d in seeds.items()]
+    heapq.heapify(pq)
+    done = set()
+    while pq:
+        du, u = heapq.heappop(pq)
+        if u in done:
+            continue
+        done.add(u)
+        for e in range(indptr[u], indptr[u + 1]):
+            v2, alt = int(nbr[e]), du + float(w[e])
+            if alt < dd.get(v2, np.inf):
+                dd[v2] = alt
+                par[v2] = (u, int(via[e]))
+                heapq.heappush(pq, (alt, v2))
+    return dd, par
+
+
 def bfs_hops(n, src, dst, s, t):
     """Unweighted BFS hop distance (sanity baseline)."""
     indptr, nbr, _ = _adj_lists(n, src, dst, np.ones(len(src)))

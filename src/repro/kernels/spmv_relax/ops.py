@@ -10,31 +10,42 @@ from repro.kernels.spmv_relax.kernel import spmv_relax_kernel
 from repro.kernels.spmv_relax.ref import spmv_relax_ref
 
 
+def ell_layout(n_v: int, dst, d_width: int = 16):
+    """Slot assignment for the ELL conversion: stable-sort edges by dst,
+    each edge's slot is its rank within the dst group (position minus
+    the group's CSR offset). Returns ``(order, rows, slots, width)`` so
+    callers can scatter any per-edge payload (weights, via vertices for
+    path reconstruction) into identically-aligned ELL planes.
+    """
+    dst = np.asarray(dst, np.int64)
+    indeg = np.bincount(dst, minlength=n_v)
+    width = max(d_width, int(-(-max(1, indeg.max(initial=0)) // d_width)
+                             * d_width))
+    if len(dst) == 0:
+        empty = np.zeros(0, np.int64)
+        return empty, empty, empty, width
+    order = np.argsort(dst, kind="stable")
+    d_sorted = dst[order]
+    indptr = np.concatenate([[0], np.cumsum(indeg)])
+    rank = np.arange(len(dst), dtype=np.int64) - indptr[d_sorted]
+    return order, d_sorted, rank, width
+
+
 def coo_to_ell(n_v: int, src, dst, w, d_width: int = 16):
     """Convert COO (src -> dst relaxation direction) into ELL rows of
     width d_width. Vertices with in-degree > d_width get *duplicate ELL
     row groups* folded via extra virtual rounds — here we instead grow
     the width to the max in-degree rounded up to a multiple of d_width
     (simple and exact; G_k degrees are bounded in practice).
-
-    Vectorized: stable-sort edges by dst, then each edge's slot is its
-    rank within the dst group (position minus the group's CSR offset).
     """
     src = np.asarray(src, np.int32)
-    dst = np.asarray(dst, np.int64)
     w = np.asarray(w, np.float32)
-    indeg = np.bincount(dst, minlength=n_v)
-    width = max(d_width, int(-(-max(1, indeg.max(initial=0)) // d_width)
-                             * d_width))
+    order, rows, slots, width = ell_layout(n_v, dst, d_width)
     ids = np.zeros((n_v, width), np.int32)
     ws = np.full((n_v, width), np.inf, np.float32)
     if len(src):
-        order = np.argsort(dst, kind="stable")
-        d_sorted = dst[order]
-        indptr = np.concatenate([[0], np.cumsum(indeg)])
-        rank = np.arange(len(dst), dtype=np.int64) - indptr[d_sorted]
-        ids[d_sorted, rank] = src[order]
-        ws[d_sorted, rank] = w[order]
+        ids[rows, slots] = src[order]
+        ws[rows, slots] = w[order]
     return jnp.asarray(ids), jnp.asarray(ws)
 
 

@@ -23,6 +23,17 @@
   dijkstra`` additionally checks a sample against the host Dijkstra
   oracle (``core/ref.py``) — the CI smoke step runs the latter on a
   tiny graph. The process exits nonzero on any mismatch or zero QPS.
+
+* ``--mode path``: the shortest-*path* retrieval workload
+  (docs/PATHS.md): the same loadgen replay served through the path
+  lane (``--hop-caps`` shape tiers). Every served path is validated
+  edge by edge against the original graph — correct endpoints, real
+  edges, weight sum equal to the served distance — and the distances
+  are audited exactly like ``--mode distance``. Nonzero exit on any
+  invalid path (the CI path smoke step).
+
+  PYTHONPATH=src python -m repro.launch.serve --mode path \
+      --graph er --n 512 --queries 512 --audit dijkstra
 """
 from __future__ import annotations
 
@@ -68,7 +79,38 @@ def _build_graph(args):
     return gen.grid_graph(int(np.sqrt(args.n)), seed=1)
 
 
-def serve_distance(args) -> int:
+def _audit_paths(src, dst, w, trace, served, path_list, valid) -> int:
+    """Validate every served path through the shared exactness gate
+    (``repro.paths.validate``); returns the failure count (0 = ok)."""
+    from repro.paths import (check_vertex_path, edge_weight_map,
+                             integral_weights)
+    failures = 0
+    if not valid.all():
+        print(f"  AUDIT FAIL: {int((~valid).sum())} served paths invalid "
+              f"(hop_cap overflow unresolved)")
+        failures += 1
+    if src is None:
+        print("  audit[paths]: edge validation SKIPPED — no edge list "
+              "with --load (distance audits below still run)")
+        return failures
+    edges = edge_weight_map(src, dst, w)
+    exact = integral_weights(edges)
+    violations = []
+    for i, p in enumerate(path_list):
+        violations += check_vertex_path(edges, int(trace.s[i]),
+                                        int(trace.t[i]), float(served[i]),
+                                        p, exact=exact)
+    if violations:
+        print(f"  AUDIT FAIL: {len(violations)} path violations, e.g. "
+              f"{violations[:3]}")
+        failures += 1
+    else:
+        print(f"  audit[paths]: {len(path_list)}/{len(path_list)} served "
+              f"paths valid (edges, endpoints, weight sum == distance)")
+    return failures
+
+
+def serve_distance(args, paths: bool = False) -> int:
     from repro.core import ISLabelIndex, IndexConfig, ref
     from repro.serve import IndexRegistry, make_trace
 
@@ -101,17 +143,24 @@ def serve_distance(args) -> int:
         args.index_name, serve_idx,
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         max_wait_ms=args.max_wait_ms, cache_size=args.cache,
-        backend=args.backend or None)
+        backend=args.backend or None,
+        path_hop_caps=(tuple(int(h) for h in args.hop_caps.split(","))
+                       if paths else None))
     print(f"  warmed {server.compile_cache_sizes()} shapes "
           f"in {server.warmup_seconds:.1f}s")
 
     trace = make_trace(args.scenario, n=n, num_requests=args.queries,
                        rate_qps=args.rate, seed=args.seed)
-    served = server.serve_trace(trace)
+    failures = 0
+    if paths:
+        served, path_list, valid = server.serve_path_trace(trace)
+        failures += _audit_paths(src, dst, w, trace, served, path_list,
+                                 valid)
+    else:
+        served = server.serve_trace(trace)
     stats = server.stats()
     print(json.dumps(stats, indent=2, sort_keys=True))
 
-    failures = 0
     if args.audit in ("index", "dijkstra"):
         want = np.asarray(idx.query(trace.s, trace.t), np.float32)
         bad = int((~((served == want)
@@ -146,7 +195,8 @@ def serve_distance(args) -> int:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "distance"], default="distance")
+    ap.add_argument("--mode", choices=["lm", "distance", "path"],
+                    default="distance")
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--gen-len", type=int, default=32)
@@ -160,6 +210,9 @@ def main():
     ap.add_argument("--rate", type=float, default=50000.0,
                     help="offered load, requests/s on the trace clock")
     ap.add_argument("--buckets", default="64,256,1024")
+    ap.add_argument("--hop-caps", default="64,256",
+                    help="path-lane hop_cap tiers (--mode path): escalate "
+                         "through these pre-warmed shapes on overflow")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--cache", type=int, default=65536)
     ap.add_argument("--backend", default="",
@@ -181,7 +234,7 @@ def main():
     if args.mode == "lm":
         serve_lm(args)
     else:
-        raise SystemExit(serve_distance(args))
+        raise SystemExit(serve_distance(args, paths=args.mode == "path"))
 
 
 if __name__ == "__main__":

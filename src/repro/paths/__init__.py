@@ -1,0 +1,13 @@
+# repro.paths — batched device-side shortest-path reconstruction over
+# IS-LABEL indexes: the fixed-shape jitted replacement for the scalar
+# host oracle (docs/PATHS.md), plus the host-side validation gate.
+from repro.paths.engine import DEFAULT_HOP_CAP, PathBatch, PathEngine
+from repro.paths.validate import (check_path, check_path_batch,
+                                  check_vertex_path, edge_weight_map,
+                                  integral_weights)
+
+__all__ = [
+    "DEFAULT_HOP_CAP", "PathBatch", "PathEngine",
+    "check_path", "check_path_batch", "check_vertex_path",
+    "edge_weight_map", "integral_weights",
+]

@@ -1,0 +1,255 @@
+"""`PathEngine` — batched shortest-path retrieval over an IS-LABEL
+index (docs/PATHS.md).
+
+Mirrors the ``QueryEngine`` serving contract: ``path_batch_fn`` returns
+a jitted fixed-shape callable (one compile per (batch, hop_cap) shape,
+memoized per resolved backend), ``warmup`` pre-compiles every serving
+shape, and all stages run through the same kernel dispatch layer the
+distance hot path uses (``label_intersect_mu`` for the meet,
+``CoreRelaxer`` for the fixed point the parents are read from).
+
+Construction is array-explicit so the same engine serves both index
+layouts: ``PathEngine.from_index`` wraps an ``ISLabelIndex`` directly;
+``ShardedIndex.path_engine()`` gathers the owning shards' label blocks
+(``unpartition_labels`` — bit-exact) and builds the identical engine,
+so sharded and unsharded path answers agree bitwise.
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import CoreRelaxer
+from repro.core.query import QueryEngine, label_intersect_mu
+from repro.kernels.backend import resolve_backend
+from repro.kernels.spmv_relax.ops import ell_layout
+from repro.paths.reconstruct import (core_chase, expand_vias, label_chase,
+                                     stitch)
+
+DEFAULT_HOP_CAP = 256
+
+
+class PathBatch(NamedTuple):
+    """One batch of reconstructed paths (fixed shapes, device arrays).
+
+    ``verts[q, :lens[q]]`` is the vertex sequence (sentinel-n padded),
+    ``weights[q, i]`` the original-graph weight of edge
+    ``(verts[q, i], verts[q, i+1])`` (0 beyond the path), ``lens[q]``
+    the vertex count (0 = unreachable), ``ok[q]`` False when the path
+    overflowed ``hop_cap`` (escalate and retry; ``dist`` stays exact).
+    """
+    dist: jax.Array        # float32[Q]
+    verts: jax.Array       # int32[Q, hop_cap]
+    weights: jax.Array     # float32[Q, hop_cap]
+    lens: jax.Array        # int32[Q]
+    ok: jax.Array          # bool[Q]
+    rounds: jax.Array      # int32 scalar (core relaxation rounds)
+
+
+class PathEngine:
+    """Device-resident path-reconstruction state + compiled entry
+    points. ``hop_cap`` is per compiled function (static), not per
+    engine — one engine serves every hop_cap tier."""
+
+    def __init__(self, *, n: int, k: int, lbl_ids, lbl_d, lbl_pred,
+                 up_ids, up_w, up_via, core_ids, core_pos, core_src,
+                 core_dst, core_w, core_via, max_rounds: int = 0,
+                 backend: str = "auto", d_width: int = 16, relaxer=None):
+        self.n = n
+        self.k = k
+        self.backend = backend
+        self.lbl_ids = jnp.asarray(lbl_ids)
+        self.lbl_d = jnp.asarray(lbl_d)
+        self.lbl_pred = jnp.asarray(lbl_pred)
+        self.l_cap = self.lbl_ids.shape[1]
+        self.up_ids = jnp.asarray(up_ids)
+        self.up_w = jnp.asarray(up_w)
+        self.up_via = jnp.asarray(up_via)
+        core_ids = np.asarray(core_ids, np.int32)
+        self.n_core = len(core_ids)
+        self.core_gid = jnp.asarray(np.append(core_ids, n).astype(np.int32))
+        self.core_pos = jnp.asarray(np.asarray(core_pos, np.int32))
+        self.max_rounds = max_rounds if max_rounds > 0 else max(self.n_core, 1)
+        self.chase_cap = max(k, 1)
+        self.expand_rounds = k + 1
+        if self.n_core > 0:
+            cpos = np.asarray(core_pos)
+            ce_src = cpos[np.asarray(core_src)].astype(np.int32)
+            ce_dst = cpos[np.asarray(core_dst)].astype(np.int32)
+            ce_w = np.asarray(core_w, np.float32)
+            # share the query engine's relaxer when offered — same
+            # arrays, same class, so the fixed point the parents are
+            # read from is the one the served distances came from
+            self.relaxer = relaxer if relaxer is not None else CoreRelaxer(
+                jnp.asarray(ce_src), jnp.asarray(ce_dst),
+                jnp.asarray(ce_w), self.n_core)
+            # ELL planes aligned slot-for-slot (ids, w, via) so the
+            # parent chase reads edge vias with the same gather
+            order, rows, slots, width = ell_layout(self.n_core + 1, ce_dst,
+                                                   d_width)
+            ids = np.zeros((self.n_core + 1, width), np.int32)
+            ws = np.full((self.n_core + 1, width), np.inf, np.float32)
+            vias = np.full((self.n_core + 1, width), -1, np.int32)
+            if len(ce_src):
+                ids[rows, slots] = ce_src[order]
+                ws[rows, slots] = ce_w[order]
+                vias[rows, slots] = np.asarray(core_via, np.int32)[order]
+            self.ell_ids = jnp.asarray(ids)
+            self.ell_w = jnp.asarray(ws)
+            self.ell_via = jnp.asarray(vias)
+        else:
+            self.relaxer = None
+        self._fns: dict = {}
+
+    # ------------------------------------------------------------ builders
+    @staticmethod
+    def from_index(index, backend: str | None = None) -> "PathEngine":
+        """Wrap an ``ISLabelIndex`` (shares its device label arrays)."""
+        return PathEngine(
+            n=index.n, k=index.k, lbl_ids=index.lbl_ids, lbl_d=index.lbl_d,
+            lbl_pred=index.lbl_pred, up_ids=index.up_ids, up_w=index.up_w,
+            up_via=index.up_via, core_ids=index.core_ids,
+            core_pos=index.core_pos_host, core_src=index.core_src,
+            core_dst=index.core_dst, core_w=index.core_w,
+            core_via=index.core_via, max_rounds=index.cfg.max_relax_rounds,
+            backend=backend or index.cfg.query_backend,
+            relaxer=index.engine.relaxer)
+
+    # Seed scatter shared with QueryEngine (as in ShardedQueryEngine)
+    # so the frontier the parents are chased over cannot drift from the
+    # one the served distances were computed with.
+    _seed = QueryEngine._seed
+
+    # ----------------------------------------------------------- core fn
+    def _run(self, s, t, hop_cap: int, backend: str) -> PathBatch:
+        n, n_core = self.n, self.n_core
+        s = jnp.asarray(s, jnp.int32)
+        t = jnp.asarray(t, jnp.int32)
+        q = s.shape[0]
+        ids_s, d_s = self.lbl_ids[s], self.lbl_d[s]
+        ids_t, d_t = self.lbl_ids[t], self.lbl_d[t]
+        mu, meet = label_intersect_mu(ids_s, d_s, ids_t, d_t, n, self.l_cap)
+        meet = jnp.asarray(meet, jnp.int32)
+        core_cap = min(n_core, hop_cap)
+        if n_core > 0:
+            seed_s = self._seed(ids_s, d_s)
+            seed_t = self._seed(ids_t, d_t)
+            _, ds, dt, rounds = self.relaxer.run(seed_s, seed_t, mu,
+                                                 self.max_rounds, backend)
+            sum_st = ds[:, :n_core] + dt[:, :n_core]
+            vstar = jnp.argmin(sum_st, axis=1).astype(jnp.int32)
+            through = jnp.take_along_axis(sum_st, vstar[:, None], 1)[:, 0]
+            dist = jnp.minimum(mu, through)
+        else:
+            rounds = jnp.int32(0)
+            through = jnp.full(q, jnp.inf, jnp.float32)
+            vstar = jnp.zeros(q, jnp.int32)
+            dist = mu
+        finite = jnp.isfinite(dist)
+        # ties prefer the label route, matching the host oracle
+        use_label = finite & (mu <= through)
+        ok = jnp.ones(q, bool)
+
+        if n_core > 0:
+            core_act = finite & ~use_label
+            seg_s_v, seg_s_via, seg_s_w, m_s, r_s, ok_s = core_chase(
+                ds, seed_s, self.ell_ids, self.ell_w, self.ell_via,
+                self.core_gid, vstar, core_act, core_cap, n)
+            seg_t_v, seg_t_via, seg_t_w, m_t, r_t, ok_t = core_chase(
+                dt, seed_t, self.ell_ids, self.ell_w, self.ell_via,
+                self.core_gid, vstar, core_act, core_cap, n)
+            ok = ok & ok_s & ok_t
+            x_s = jnp.where(use_label, meet, self.core_gid[r_s])
+            x_t = jnp.where(use_label, meet, self.core_gid[r_t])
+        else:
+            zero_i = jnp.zeros((q, 0), jnp.int32)
+            zero_f = jnp.zeros((q, 0), jnp.float32)
+            seg_s_v = seg_t_v = zero_i
+            seg_s_via = seg_t_via = zero_i
+            seg_s_w = seg_t_w = zero_f
+            m_s = m_t = jnp.zeros(q, jnp.int32)
+            x_s = x_t = meet
+        vstar_g = self.core_gid[vstar] if n_core > 0 else s
+
+        ls_v, ls_via, ls_w, p_s, ok_ls = label_chase(
+            self.lbl_ids, self.lbl_pred, self.up_ids, self.up_w,
+            self.up_via, s, x_s, finite, self.chase_cap, n)
+        lt_v, lt_via, lt_w, p_t, ok_lt = label_chase(
+            self.lbl_ids, self.lbl_pred, self.up_ids, self.up_w,
+            self.up_via, t, x_t, finite, self.chase_cap, n)
+        ok = ok & ok_ls & ok_lt
+
+        verts, evia, ew, length, ok_st = stitch(
+            s, t, finite, hop_cap, n,
+            ls_v, ls_via, ls_w, p_s,
+            seg_s_v, seg_s_via, seg_s_w, m_s,
+            vstar_g, seg_t_v, seg_t_via, seg_t_w, m_t,
+            lt_v, lt_via, lt_w, p_t, x_t)
+        verts, weights, length, ok_ex = expand_vias(
+            verts, evia, ew, length, ok & ok_st, self.up_ids, self.up_w,
+            self.up_via, n, self.expand_rounds)
+        return PathBatch(dist, verts, weights, length, ok_ex, rounds)
+
+    # ------------------------------------------------------- serving APIs
+    def path_batch_fn(self, hop_cap: int = DEFAULT_HOP_CAP,
+                      backend: str | None = None):
+        """Jitted ``run(s, t) -> PathBatch`` with static ``hop_cap``.
+
+        Memoized per (resolved backend, hop_cap); no host sync inside —
+        the serving layer owns blocking, timing, and hop_cap
+        escalation. Same contract as ``QueryEngine.batch_fn``.
+        """
+        backend = resolve_backend(self.backend if backend is None else backend)
+        key = (backend, int(hop_cap))
+        if key not in self._fns:
+            hc = int(hop_cap)
+
+            def run(s, t):
+                return self._run(s, t, hc, backend)
+            self._fns[key] = jax.jit(run)
+        return self._fns[key]
+
+    def warmup(self, batch_sizes, hop_caps=(DEFAULT_HOP_CAP,),
+               backend: str | None = None) -> dict:
+        """Pre-compile every (batch, hop_cap) entry point. Returns
+        {(size, hop_cap): seconds}."""
+        out = {}
+        for hc in hop_caps:
+            fn = self.path_batch_fn(hc, backend)
+            for size in batch_sizes:
+                z = jnp.zeros(int(size), jnp.int32)
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(z, z))
+                out[(int(size), int(hc))] = time.perf_counter() - t0
+        return out
+
+    # -------------------------------------------------------- host APIs
+    def paths(self, s, t, hop_cap: int = DEFAULT_HOP_CAP,
+              backend: str | None = None, max_escalations: int = 4):
+        """Host convenience: batched paths as Python lists.
+
+        Escalates hop_cap (doubling, up to ``max_escalations`` times)
+        until every reconstructed path fits. Returns
+        ``(dist float32[Q], paths list[list[int]], ok bool[Q])`` —
+        unreachable pairs get an empty list.
+        """
+        s = np.atleast_1d(np.asarray(s, np.int32))
+        t = np.atleast_1d(np.asarray(t, np.int32))
+        hc = int(hop_cap)
+        for _ in range(max_escalations + 1):
+            out = jax.block_until_ready(
+                self.path_batch_fn(hc, backend)(s, t))
+            ok = np.asarray(out.ok)
+            if ok.all():
+                break
+            hc *= 2
+        dist = np.asarray(out.dist)
+        verts = np.asarray(out.verts)
+        lens = np.asarray(out.lens)
+        paths = [verts[i, :lens[i]].tolist() if ok[i] else []
+                 for i in range(len(s))]
+        return dist, paths, ok

@@ -1,15 +1,16 @@
-# repro.serve — the distance-serving subsystem over ISLabelIndex:
+# repro.serve — the distance/path-serving subsystem over ISLabelIndex:
 # shape-bucket micro-batching, μ-exact routing, LRU caching, metrics,
-# a multi-graph registry, and a scenario load generator.
+# a multi-graph registry, a scenario load generator, and a batched
+# shortest-path lane (docs/PATHS.md).
 from repro.serve.batcher import Batch, MicroBatcher, PendingRequest
 from repro.serve.cache import LRUCache
-from repro.serve.engine import DistanceServer, mu_exact_mask
+from repro.serve.engine import DistanceServer, PathAnswer, mu_exact_mask
 from repro.serve.loadgen import SCENARIOS, Trace, make_trace
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import IndexRegistry
 
 __all__ = [
     "Batch", "MicroBatcher", "PendingRequest", "LRUCache",
-    "DistanceServer", "mu_exact_mask", "SCENARIOS", "Trace", "make_trace",
-    "ServeMetrics", "IndexRegistry",
+    "DistanceServer", "PathAnswer", "mu_exact_mask", "SCENARIOS", "Trace",
+    "make_trace", "ServeMetrics", "IndexRegistry",
 ]

@@ -35,6 +35,16 @@ and every guarantee above — bitwise equality with the unsharded index,
 μ-routing soundness, zero compiles after warmup — holds unchanged. A
 registry can host sharded and unsharded graphs side by side.
 
+Path lane. Constructing with ``path_hop_caps=(h1, h2, ...)`` opens a
+third request lane serving full shortest-*path* retrieval
+(docs/PATHS.md): ``submit_path``/``serve_path_trace`` micro-batch into
+the same shape buckets, run the pre-warmed ``PathEngine`` entry points
+(jitted per (bucket, hop_cap) shape), and escalate through the hop_cap
+tiers when a path overflows — falling back to the exact host oracle
+(``index.shortest_path``) for the rare path longer than every tier.
+Path answers are cached separately from distances (a path is a
+strictly larger object with its own hit economics).
+
 The engine is clock-driven and deterministic: callers pass ``now``
 (simulated or wall time) to ``submit``/``pump``. ``serve_trace`` replays
 a loadgen trace on its own clock — queue waits come from the trace
@@ -44,6 +54,7 @@ end owns its lock and calls the same three methods with wall time.
 from __future__ import annotations
 
 import time
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +65,16 @@ from repro.serve.cache import LRUCache
 from repro.serve.metrics import ServeMetrics
 
 LANES = ("mu", "full")
+PATH_LANE = "path"
+
+
+class PathAnswer(NamedTuple):
+    """One served path request: exact distance, vertex list (empty when
+    unreachable), and whether the path itself is trustworthy (False
+    only if every hop_cap tier and the host fallback failed)."""
+    dist: float
+    path: tuple
+    valid: bool
 
 
 def mu_exact_mask(index) -> np.ndarray:
@@ -83,7 +104,8 @@ class DistanceServer:
     def __init__(self, index, *, name: str = "default",
                  buckets=(64, 256, 1024), max_wait_ms: float = 2.0,
                  cache_size: int = 65536, cache_symmetric: bool = False,
-                 backend: str | None = None, warmup: bool = True):
+                 backend: str | None = None, warmup: bool = True,
+                 path_hop_caps=None):
         self.index = index
         self.name = name
         self.buckets = tuple(sorted(int(b) for b in buckets))
@@ -96,7 +118,20 @@ class DistanceServer:
         self._no_core_entry = mu_exact_mask(index)
         self._fns = {"mu": index.engine.mu_batch_fn(backend),
                      "full": index.engine.batch_fn(backend)}
-        self._results: dict[int, float] = {}
+        self.path_hop_caps = (tuple(sorted(int(h) for h in path_hop_caps))
+                              if path_hop_caps else ())
+        self._path_fns = {}
+        if self.path_hop_caps:
+            # never symmetric: distances commute on undirected graphs
+            # but a path vertex list is directional — a (t, s) hit
+            # would serve the (s, t) list with reversed endpoints
+            self.path_cache = LRUCache(cache_size, symmetric=False)
+            self.lanes[PATH_LANE] = MicroBatcher(self.buckets,
+                                                 self.max_wait_s)
+            engine = index.path_engine()
+            self._path_fns = {h: engine.path_batch_fn(h, backend)
+                              for h in self.path_hop_caps}
+        self._results: dict[int, object] = {}
         self._next_rid = 0
         self.warmup_seconds = 0.0
         if warmup:
@@ -112,6 +147,11 @@ class DistanceServer:
         self._no_core_entry = mu_exact_mask(self.index)
         self._fns = {"mu": self.index.engine.mu_batch_fn(self.backend),
                      "full": self.index.engine.batch_fn(self.backend)}
+        if self.path_hop_caps:
+            self.path_cache.clear()
+            engine = self.index.path_engine()
+            self._path_fns = {h: engine.path_batch_fn(h, self.backend)
+                              for h in self.path_hop_caps}
         if warmup:
             self.warmup()
 
@@ -119,9 +159,13 @@ class DistanceServer:
     def warmup(self) -> dict:
         """Compile every (lane, bucket) entry point up front so no XLA
         compile happens on the serving path (asserted in tests via the
-        jit cache sizes)."""
+        jit cache sizes). With a path lane, every (bucket, hop_cap)
+        tier is pre-compiled too."""
         t0 = time.perf_counter()
         timings = self.index.engine.warmup(self.buckets, self.backend)
+        if self.path_hop_caps:
+            timings.update(self.index.path_engine().warmup(
+                self.buckets, self.path_hop_caps, self.backend))
         self.warmup_seconds = time.perf_counter() - t0
         return timings
 
@@ -139,6 +183,9 @@ class DistanceServer:
         for lane, fn in self._fns.items():
             probe = getattr(fn, "_cache_size", None)
             out[lane] = int(probe()) if callable(probe) else -1
+        for h, fn in self._path_fns.items():
+            probe = getattr(fn, "_cache_size", None)
+            out[f"path{h}"] = int(probe()) if callable(probe) else -1
         return out
 
     # ---------------------------------------------------------- routing
@@ -174,26 +221,54 @@ class DistanceServer:
         self.lanes[lane].add(PendingRequest(rid, int(s), int(t), float(now)))
         return rid
 
+    def submit_path(self, s: int, t: int, now: float) -> int:
+        """Enqueue one shortest-path request on the path lane (requires
+        ``path_hop_caps``); returns its request id. The resolved value
+        is a ``PathAnswer``. Cache hits resolve immediately."""
+        if not self.path_hop_caps:
+            raise ValueError("server built without path_hop_caps; "
+                             "path lane is disabled")
+        rid = self._next_rid
+        self._next_rid += 1
+        hit = self.path_cache.get(s, t)
+        if hit is not None:
+            self._results[rid] = hit
+            self.metrics.record_cache_hit()
+            return rid
+        self.lanes[PATH_LANE].add(
+            PendingRequest(rid, int(s), int(t), float(now)))
+        return rid
+
     def pump(self, now: float, force: bool = False) -> int:
         """Execute every batch that is ready at ``now`` (bucket filled,
         deadline expired, or ``force``). Returns requests completed."""
         done = 0
         for lane_name, lane in self.lanes.items():
             while (batch := lane.drain(now, force=force)) is not None:
-                done += self._execute(lane_name, batch)
+                if lane_name == PATH_LANE:
+                    done += self._execute_path(batch)
+                else:
+                    done += self._execute(lane_name, batch)
         return done
 
-    def take_result(self, rid: int) -> float | None:
+    def take_result(self, rid: int):
         return self._results.pop(rid, None)
 
-    def _execute(self, lane: str, batch) -> int:
+    @staticmethod
+    def _batch_arrays(batch):
+        """Shared batch prologue: endpoint arrays edge-padded up to the
+        bucket shape (padding replays the last request, so escalation
+        and routing decisions see only real endpoints)."""
         reqs = batch.requests
         p = len(reqs)
         s = np.fromiter((r.s for r in reqs), np.int32, p)
         t = np.fromiter((r.t for r in reqs), np.int32, p)
-        pad = batch.bucket - p                  # edge-pad: replays last req
-        s_pad = jnp.asarray(np.pad(s, (0, pad), mode="edge"))
-        t_pad = jnp.asarray(np.pad(t, (0, pad), mode="edge"))
+        pad = batch.bucket - p
+        return (reqs, p, jnp.asarray(np.pad(s, (0, pad), mode="edge")),
+                jnp.asarray(np.pad(t, (0, pad), mode="edge")))
+
+    def _execute(self, lane: str, batch) -> int:
+        reqs, p, s_pad, t_pad = self._batch_arrays(batch)
         t0 = time.perf_counter()
         out = self._fns[lane](s_pad, t_pad)
         out = jax.block_until_ready(out)
@@ -213,26 +288,100 @@ class DistanceServer:
         self.metrics.record_batch(lane, batch.bucket, p, exec_s, rounds)
         return p
 
+    def _execute_path(self, batch) -> int:
+        """Run one path-lane batch: lowest hop_cap tier first, escalate
+        to the next pre-warmed tier while any path overflows, host
+        oracle for anything longer than every tier. Note the fallback
+        is a metered slow path: for a ShardedIndex it runs the batched
+        engine at unwarmed scalar shapes and may therefore compile —
+        the zero-compile guarantee covers the pre-warmed tiers, and the
+        fallback's full cost (compiles included) is charged to the
+        batch's execution time below."""
+        reqs, p, s_pad, t_pad = self._batch_arrays(batch)
+        exec_s, out = 0.0, None
+        for hop_cap in self.path_hop_caps:
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(self._path_fns[hop_cap](s_pad, t_pad))
+            exec_s += time.perf_counter() - t0
+            if bool(np.asarray(out.ok)[:p].all()):
+                break
+            self.metrics.record_path_overflow()
+        dist = np.asarray(out.dist)
+        verts = np.asarray(out.verts)
+        lens = np.asarray(out.lens)
+        ok = np.asarray(out.ok)
+        answers = {}
+        t0 = time.perf_counter()
+        for i, r in enumerate(reqs):
+            if ok[i]:
+                answers[i] = PathAnswer(
+                    float(dist[i]), tuple(verts[i, :lens[i]].tolist()), True)
+            else:
+                # longer than every warmed tier: exact host oracle. A
+                # finite distance with an empty path means even the
+                # oracle's escalation ceiling was hit (sharded fallback)
+                # — never report that as a trustworthy path.
+                d_host, path = self.index.shortest_path(r.s, r.t)
+                answers[i] = PathAnswer(
+                    float(d_host), tuple(path),
+                    bool(path) or not np.isfinite(d_host))
+        # the fallback is part of what this batch cost the server —
+        # charge it to the batch's execution time, not to nobody
+        exec_s += time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            self._results[r.rid] = answers[i]
+            self.path_cache.put(r.s, r.t, answers[i])
+            wait = max(0.0, batch.t_flush - r.t_arrival)
+            self.metrics.record_latency(wait + exec_s)
+        self.metrics.record_batch(PATH_LANE, batch.bucket, p, exec_s,
+                                  int(out.rounds))
+        return p
+
     # ------------------------------------------------------ trace replay
-    def serve_trace(self, trace) -> np.ndarray:
-        """Replay a loadgen trace on its simulated clock. Returns
-        float32 answers aligned with the trace; metrics accumulate on
-        ``self.metrics``."""
+    def _replay(self, trace, submit_fn) -> np.ndarray:
+        """Shared replay loop: drive the batcher on the trace's
+        simulated clock, submitting each request via ``submit_fn(i, s,
+        t, now)``. Returns the request ids."""
         n_req = len(trace)
-        lanes = self.route(trace.s, trace.t)
         rids = np.empty(n_req, np.int64)
         for i in range(n_req):
             now = float(trace.arrival_s[i])
             self.pump(now)
-            rids[i] = self.submit(int(trace.s[i]), int(trace.t[i]), now,
-                                  lane=str(lanes[i]))
+            rids[i] = submit_fn(i, int(trace.s[i]), int(trace.t[i]), now)
             self.pump(now)
         self.pump(trace.span_s, force=True)
         self.metrics.trace_span_s += trace.span_s
-        answers = np.empty(n_req, np.float32)
-        for i in range(n_req):
+        return rids
+
+    def serve_trace(self, trace) -> np.ndarray:
+        """Replay a loadgen trace on its simulated clock. Returns
+        float32 answers aligned with the trace; metrics accumulate on
+        ``self.metrics``."""
+        lanes = self.route(trace.s, trace.t)
+        rids = self._replay(
+            trace, lambda i, s, t, now: self.submit(s, t, now,
+                                                    lane=str(lanes[i])))
+        answers = np.empty(len(trace), np.float32)
+        for i in range(len(trace)):
             answers[i] = self._results.pop(int(rids[i]))
         return answers
+
+    def serve_path_trace(self, trace):
+        """Replay a loadgen trace as shortest-*path* requests. Returns
+        ``(dist float32[R], paths list of vertex lists, valid bool[R])``
+        aligned with the trace; metrics accumulate under the "path"
+        lane."""
+        rids = self._replay(
+            trace, lambda i, s, t, now: self.submit_path(s, t, now))
+        n_req = len(trace)
+        dist = np.empty(n_req, np.float32)
+        paths, valid = [], np.empty(n_req, bool)
+        for i in range(n_req):
+            ans = self._results.pop(int(rids[i]))
+            dist[i] = ans.dist
+            paths.append(list(ans.path))
+            valid[i] = ans.valid
+        return dist, paths, valid
 
     # ----------------------------------------------------------- status
     def stats(self) -> dict:
@@ -242,6 +391,7 @@ class DistanceServer:
                       "n_core": int(self.index.stats.n_core),
                       "shards": int(getattr(self.index, "num_shards", 1))},
             "buckets": list(self.buckets),
+            "path_hop_caps": list(self.path_hop_caps),
             "max_wait_ms": self.max_wait_s * 1e3,
             "backend": self.backend or "auto",
             "warmup_seconds": self.warmup_seconds,

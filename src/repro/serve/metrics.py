@@ -40,6 +40,7 @@ class ServeMetrics:
         self.latencies: list[float] = []
         self.served = 0
         self.cache_hits = 0
+        self.path_overflows = 0    # hop_cap tier escalations (path lane)
         self.trace_span_s = 0.0
         self.type_counts = {1: 0, 2: 0, 3: 0}   # paper §5.2 endpoint classes
 
@@ -57,6 +58,9 @@ class ServeMetrics:
         self.served += 1
         self.latencies.append(0.0)
 
+    def record_path_overflow(self) -> None:
+        self.path_overflows += 1
+
     def record_types(self, classes) -> None:
         for c, cnt in zip(*np.unique(np.asarray(classes), return_counts=True)):
             self.type_counts[int(c)] += int(cnt)
@@ -66,7 +70,7 @@ class ServeMetrics:
         lat = np.asarray(self.latencies, np.float64)
         exec_total = sum(b.exec_s for b in self.batches)
         lanes = {}
-        for lane in ("mu", "full"):
+        for lane in ("mu", "full", "path"):
             bs = [b for b in self.batches if b.lane == lane]
             lanes[lane] = {
                 "batches": len(bs),
@@ -84,6 +88,7 @@ class ServeMetrics:
             "batches": len(self.batches),
             "cache_hits": self.cache_hits,
             "cache_hit_rate": self.cache_hits / total if total else 0.0,
+            "path_overflows": self.path_overflows,
             # device-path requests only: cache hits consume no device
             # time and must not inflate the hardware-throughput figure
             "qps_compute": batch_served / exec_total if exec_total else 0.0,

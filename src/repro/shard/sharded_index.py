@@ -81,6 +81,15 @@ class ShardedIndex:
     mesh: Mesh
     engine: ShardedQueryEngine
     stats: BuildStats
+    # path-reconstruction state (host; queries never read it): the
+    # core via bookkeeping and the up-adjacency matrices. None on
+    # indexes saved before path support — path queries then raise.
+    core_via: np.ndarray | None = None
+    up_ids: np.ndarray | None = None
+    up_w: np.ndarray | None = None
+    up_via: np.ndarray | None = None
+    _paths: object = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     # ---------------------------------------------------------- builders
     @staticmethod
@@ -109,12 +118,15 @@ class ShardedIndex:
             core_pos=index.core_pos_host, core_src=index.core_src,
             core_dst=index.core_dst, core_w=index.core_w,
             stats=index.stats, strategy=strategy,
-            replicate_top=replicate_top, mesh=mesh)
+            replicate_top=replicate_top, mesh=mesh,
+            core_via=index.core_via, up_ids=index.up_ids,
+            up_w=index.up_w, up_via=index.up_via)
 
     @staticmethod
     def _assemble(*, n, k, cfg, level, shard_of, blocks: LabelBlocks,
                   core_ids, core_pos, core_src, core_dst, core_w, stats,
-                  strategy, replicate_top, mesh) -> "ShardedIndex":
+                  strategy, replicate_top, mesh, core_via=None,
+                  up_ids=None, up_w=None, up_via=None) -> "ShardedIndex":
         num_shards = blocks.num_shards
         if mesh is None:
             mesh = make_shard_mesh(num_shards)
@@ -146,7 +158,11 @@ class ShardedIndex:
             lbl_pred=np.asarray(blocks.pred), core_ids=np.asarray(core_ids),
             core_pos_host=np.asarray(core_pos),
             core_src=np.asarray(core_src), core_dst=np.asarray(core_dst),
-            core_w=np.asarray(core_w), mesh=mesh, engine=engine, stats=stats)
+            core_w=np.asarray(core_w), mesh=mesh, engine=engine, stats=stats,
+            core_via=None if core_via is None else np.asarray(core_via),
+            up_ids=None if up_ids is None else np.asarray(up_ids),
+            up_w=None if up_w is None else np.asarray(up_w),
+            up_via=None if up_via is None else np.asarray(up_via))
 
     # ------------------------------------------------------------- query
     def query(self, s, t, backend: str | None = None):
@@ -165,16 +181,75 @@ class ShardedIndex:
         recorded at partition time — no device round trip."""
         return self.entries_per_shard.copy()
 
+    # ------------------------------------------------------------- paths
+    def gather_label_rows(self):
+        """Reassemble full ``[n+1, l_cap]`` label arrays by gathering
+        every vertex's entries from the shard that owns their ancestor
+        (plus the replicated top levels) — the bit-exact
+        ``unpartition_labels`` inverse asserted in tests. Host-side."""
+        from repro.shard.partition import unpartition_labels
+        blocks = LabelBlocks(ids=np.asarray(self.lbl_ids),
+                             d=np.asarray(self.lbl_d),
+                             pred=np.asarray(self.lbl_pred),
+                             entries=self.entries_per_shard)
+        return unpartition_labels(blocks, self.n, self.cfg.l_cap)
+
+    def path_engine(self):
+        """Batched path reconstruction over the sharded index
+        (docs/PATHS.md): label rows are gathered once from the owning
+        shards' blocks and the identical ``repro.paths.PathEngine`` is
+        built over them, so sharded and unsharded path answers agree
+        bitwise. Paths are a lower-QPS workload than distances; the
+        distance hot path keeps the labels partitioned."""
+        if self._paths is None:
+            if self.up_ids is None:
+                raise ValueError(
+                    "this ShardedIndex was saved without path state "
+                    "(up-edge matrices); rebuild with "
+                    "ShardedIndex.from_index to serve path queries")
+            from repro.paths import PathEngine
+            ids, d, pred = self.gather_label_rows()
+            self._paths = PathEngine(
+                n=self.n, k=self.k, lbl_ids=ids, lbl_d=d, lbl_pred=pred,
+                up_ids=self.up_ids, up_w=self.up_w, up_via=self.up_via,
+                core_ids=self.core_ids, core_pos=self.core_pos_host,
+                core_src=self.core_src, core_dst=self.core_dst,
+                core_w=self.core_w, core_via=self.core_via,
+                max_rounds=self.cfg.max_relax_rounds,
+                backend=self.cfg.query_backend,
+                relaxer=self.engine.relaxer)
+        return self._paths
+
+    def shortest_paths(self, s, t, hop_cap: int = 256,
+                       backend: str | None = None):
+        """Batched shortest paths — same contract as
+        ``ISLabelIndex.shortest_paths``."""
+        return self.path_engine().paths(s, t, hop_cap=hop_cap,
+                                        backend=backend)
+
+    def shortest_path(self, s: int, t: int):
+        """Scalar convenience mirroring ``ISLabelIndex.shortest_path``
+        (used as the serving fallback for hop_cap overflows). Unlike
+        the host-recursive oracle this runs the batched engine with
+        escalating hop_cap — a finite distance with an empty path means
+        the escalation ceiling was hit and no path was recovered."""
+        dist, paths, ok = self.shortest_paths([s], [t])
+        return float(dist[0]), paths[0]
+
     # ---------------------------------------------------------------- io
     def save(self, path) -> None:
         p = Path(path)
         p.mkdir(parents=True, exist_ok=True)
+        path_state = {}
+        if self.up_ids is not None:
+            path_state = {"core_via": self.core_via, "up_ids": self.up_ids,
+                          "up_w": self.up_w, "up_via": self.up_via}
         np.savez_compressed(
             p / "shards.npz", level=self.level, shard_of=self.shard_of,
             lbl_ids=np.asarray(self.lbl_ids), lbl_d=np.asarray(self.lbl_d),
             lbl_pred=np.asarray(self.lbl_pred), core_ids=self.core_ids,
             core_pos=self.core_pos_host, core_src=self.core_src,
-            core_dst=self.core_dst, core_w=self.core_w)
+            core_dst=self.core_dst, core_w=self.core_w, **path_state)
         meta = {"n": self.n, "k": self.k, "num_shards": self.num_shards,
                 "strategy": self.strategy,
                 "replicate_top": self.replicate_top,
@@ -191,6 +266,7 @@ class ShardedIndex:
             ids=z["lbl_ids"], d=z["lbl_d"], pred=z["lbl_pred"],
             entries=(z["lbl_ids"][:, :meta["n"]] < meta["n"])
             .sum(axis=(1, 2)).astype(np.int64))
+        has_paths = "up_ids" in z.files
         idx = ShardedIndex._assemble(
             n=meta["n"], k=meta["k"], cfg=IndexConfig(**meta["cfg"]),
             level=z["level"], shard_of=z["shard_of"], blocks=blocks,
@@ -198,5 +274,9 @@ class ShardedIndex:
             core_src=z["core_src"], core_dst=z["core_dst"],
             core_w=z["core_w"], stats=BuildStats(**meta["stats"]),
             strategy=meta["strategy"], replicate_top=meta["replicate_top"],
-            mesh=mesh)
+            mesh=mesh,
+            core_via=z["core_via"] if has_paths else None,
+            up_ids=z["up_ids"] if has_paths else None,
+            up_w=z["up_w"] if has_paths else None,
+            up_via=z["up_via"] if has_paths else None)
         return idx

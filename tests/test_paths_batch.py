@@ -1,0 +1,352 @@
+"""Tier-1 tests for the ``repro.paths`` subsystem (docs/PATHS.md).
+
+Covers: batched reconstruction validity (endpoints, real edges, weight
+sum bitwise-equal to the served distance), bitwise distance agreement
+with the query hot path, s == t and disconnected pairs, paths entirely
+inside the core, hop_cap overflow + escalation, kernel-backend parity,
+the serving path lane, sharded path answers (blocks gathered from the
+owning shards, bitwise vs unsharded, P in {1, 4}), directed-graph path
+reconstruction, and a hypothesis/fallback property sweep. hypothesis is
+optional (requirements-dev): without it the sweep falls back to fixed
+seeds.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import ISLabelIndex, IndexConfig
+from repro.graphs import generators as gen
+from repro.paths import (PathEngine, check_path_batch, edge_weight_map)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_with_devices(code: str, n_dev: int = 4, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gen.rmat_graph(8, avg_deg=5.0, seed=2)
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    n, src, dst, w = graph
+    return ISLabelIndex.build(n, src, dst, w,
+                              IndexConfig(l_cap=256, label_chunk=128))
+
+
+@pytest.fixture(scope="module")
+def edges(graph):
+    n, src, dst, w = graph
+    return edge_weight_map(src, dst, w)
+
+
+@pytest.fixture(scope="module")
+def batch(graph, index):
+    n = graph[0]
+    r = np.random.default_rng(3)
+    s = r.integers(0, n, 96).astype(np.int32)
+    t = r.integers(0, n, 96).astype(np.int32)
+    out = index.path_engine().path_batch_fn(128)(s, t)
+    return s, t, out
+
+
+# ----------------------------------------------------------- validity
+def test_batched_paths_valid_and_distance_bitwise(graph, index, edges,
+                                                  batch):
+    n, src, dst, w = graph
+    s, t, out = batch
+    want = np.asarray(index.query(s, t), np.float32)
+    assert np.array_equal(np.asarray(out.dist), want, equal_nan=True)
+    rep = check_path_batch(edges, s, t, out)
+    assert rep["overflowed"] == 0
+    assert rep["violations"] == []
+    assert rep["checked"] == len(s)
+
+
+def test_matches_scalar_oracle_distances(index, batch):
+    s, t, out = batch
+    dist = np.asarray(out.dist)
+    lens = np.asarray(out.lens)
+    for i in range(0, 24):
+        d, p = index.shortest_path(int(s[i]), int(t[i]))
+        if np.isfinite(d):
+            # same distance; path lengths may differ (ties), both valid
+            assert float(dist[i]) == d
+            assert lens[i] >= 2 or s[i] == t[i]
+        else:
+            assert not np.isfinite(dist[i]) and lens[i] == 0
+
+
+def test_s_equals_t(index):
+    s = np.asarray([5, 17, 0], np.int32)
+    out = index.path_engine().path_batch_fn(64)(s, s)
+    assert np.array_equal(np.asarray(out.dist), np.zeros(3, np.float32))
+    assert np.array_equal(np.asarray(out.lens), np.ones(3, np.int32))
+    verts = np.asarray(out.verts)
+    assert np.array_equal(verts[:, 0], s)
+    assert np.asarray(out.ok).all()
+
+
+def test_disconnected_pairs_empty_path():
+    # sparse ER has small components: some pairs are unreachable
+    n, src, dst, w = gen.er_graph(300, 1.5, seed=7)
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=128, label_chunk=64))
+    r = np.random.default_rng(0)
+    s = r.integers(0, n, 64).astype(np.int32)
+    t = r.integers(0, n, 64).astype(np.int32)
+    out = idx.path_engine().path_batch_fn(64)(s, t)
+    dist = np.asarray(out.dist)
+    lens = np.asarray(out.lens)
+    assert (~np.isfinite(dist)).any(), "fixture should have unreachable pairs"
+    assert np.array_equal(lens == 0, ~np.isfinite(dist))
+    assert np.asarray(out.ok).all()
+
+
+def test_paths_entirely_inside_the_core(graph, index, edges):
+    # both endpoints core vertices: label chases are empty, the whole
+    # path is the predecessor-tracked core segment
+    core = index.core_ids
+    assert len(core) >= 8
+    s = core[:8].astype(np.int32)
+    t = core[-8:][::-1].copy().astype(np.int32)
+    out = index.path_engine().path_batch_fn(128)(s, t)
+    rep = check_path_batch(edges, s, t, out)
+    assert rep["violations"] == [] and rep["overflowed"] == 0
+    verts = np.asarray(out.verts)
+    lens = np.asarray(out.lens)
+    dist = np.asarray(out.dist)
+    lvl = index.level
+    for i in range(len(s)):
+        if np.isfinite(dist[i]) and s[i] != t[i]:
+            assert lens[i] >= 2
+            # every vertex of a core-to-core shortest path stays in
+            # levels reachable from the core expansion; endpoints core
+            assert lvl[verts[i, 0]] == index.k
+            assert lvl[verts[i, lens[i] - 1]] == index.k
+
+
+def test_hop_cap_overflow_flags_and_escalation(graph, index):
+    n = graph[0]
+    r = np.random.default_rng(5)
+    s = r.integers(0, n, 64).astype(np.int32)
+    t = r.integers(0, n, 64).astype(np.int32)
+    tiny = index.path_engine().path_batch_fn(4)(s, t)
+    ok = np.asarray(tiny.ok)
+    dist = np.asarray(tiny.dist)
+    # distances stay exact even when the path overflows
+    want = np.asarray(index.query(s, t), np.float32)
+    assert np.array_equal(dist, want, equal_nan=True)
+    assert not ok.all(), "hop_cap=4 should overflow some paths"
+    d2, paths, ok2 = index.shortest_paths(s, t, hop_cap=4)
+    assert ok2.all()
+    assert np.array_equal(d2, want, equal_nan=True)
+    for i, p in enumerate(paths):
+        if np.isfinite(want[i]):
+            assert p[0] == s[i] and p[-1] == t[i]
+
+
+@pytest.mark.parametrize("backend", ["reference", "interpret"])
+def test_backend_parity_bitwise(graph, index, batch, backend):
+    s, t, ref_out = batch
+    out = index.path_engine().path_batch_fn(128, backend)(s, t)
+    for field in ("dist", "verts", "weights", "lens", "ok"):
+        a = np.asarray(getattr(ref_out, field))
+        b = np.asarray(getattr(out, field))
+        assert np.array_equal(a, b, equal_nan=True), (backend, field)
+
+
+# ------------------------------------------------------------- serving
+def test_serving_path_lane_end_to_end(graph, index, edges):
+    from repro.serve import DistanceServer, make_trace
+    n = graph[0]
+    srv = DistanceServer(index, buckets=(8, 32), max_wait_ms=1.0,
+                         path_hop_caps=(16, 128))
+    tr = make_trace("uniform", n=n, num_requests=200, rate_qps=2e4, seed=9)
+    dist, paths, valid = srv.serve_path_trace(tr)
+    assert valid.all()
+    want = np.asarray(index.query(tr.s, tr.t), np.float32)
+    assert np.array_equal(dist, want, equal_nan=True)
+    for i, p in enumerate(paths):
+        if not np.isfinite(dist[i]):
+            assert p == []
+            continue
+        assert p[0] == tr.s[i] and p[-1] == tr.t[i]
+        total = sum(edges[(a, b)] for a, b in zip(p[:-1], p[1:]))
+        assert np.float32(total) == dist[i]
+    snap = srv.stats()
+    assert snap["lanes"]["path"]["requests"] + snap["cache_hits"] >= 200
+    # distance lanes unaffected
+    got = srv.serve_trace(make_trace("hotspot", n=n, num_requests=100,
+                                     rate_qps=2e4, seed=10))
+    assert len(got) == 100
+
+
+def test_serving_path_cache_hits(graph, index):
+    from repro.serve import DistanceServer, make_trace
+    n = graph[0]
+    srv = DistanceServer(index, buckets=(8,), max_wait_ms=1.0,
+                         path_hop_caps=(64,))
+    tr = make_trace("repeated", n=n, num_requests=150, pool=20, seed=11)
+    dist, paths, valid = srv.serve_path_trace(tr)
+    assert valid.all()
+    assert srv.stats()["cache_hit_rate"] > 0.5
+
+
+def test_path_cache_never_symmetric(graph, index):
+    # distances commute on undirected graphs but a path list is
+    # directional: a symmetric distance cache must not make a (t, s)
+    # path request return the (s, t) vertex list
+    from repro.serve import DistanceServer
+    n = graph[0]
+    srv = DistanceServer(index, buckets=(8,), max_wait_ms=1.0,
+                         cache_symmetric=True, path_hop_caps=(64,))
+    want = np.asarray(index.query(np.arange(n, dtype=np.int32),
+                                  np.zeros(n, np.int32)))
+    s = int(np.flatnonzero(np.isfinite(want) & (np.arange(n) != 0))[0])
+    r1 = srv.submit_path(s, 0, now=0.0)
+    srv.pump(now=1.0, force=True)
+    a1 = srv.take_result(r1)
+    r2 = srv.submit_path(0, s, now=2.0)
+    srv.pump(now=3.0, force=True)
+    a2 = srv.take_result(r2)
+    assert a1.path[0] == s and a1.path[-1] == 0
+    assert a2.path[0] == 0 and a2.path[-1] == s
+
+
+def test_submit_path_requires_enabled_lane(index):
+    from repro.serve import DistanceServer
+    srv = DistanceServer(index, buckets=(8,), max_wait_ms=1.0,
+                         warmup=False)
+    with pytest.raises(ValueError):
+        srv.submit_path(1, 2, now=0.0)
+
+
+# ------------------------------------------------------------- sharded
+def test_sharded_paths_bitwise_p1(graph, index):
+    from repro.shard import ShardedIndex
+    n = graph[0]
+    sidx = ShardedIndex.from_index(index, 1)
+    r = np.random.default_rng(13)
+    s = r.integers(0, n, 48).astype(np.int32)
+    t = r.integers(0, n, 48).astype(np.int32)
+    a = index.path_engine().path_batch_fn(128)(s, t)
+    b = sidx.path_engine().path_batch_fn(128)(s, t)
+    for field in ("dist", "verts", "weights", "lens", "ok"):
+        assert np.array_equal(np.asarray(getattr(a, field)),
+                              np.asarray(getattr(b, field)),
+                              equal_nan=True), field
+
+
+def test_sharded_paths_bitwise_p4_subprocess():
+    run_with_devices("""
+        import numpy as np
+        from repro.core import ISLabelIndex, IndexConfig
+        from repro.graphs import generators as gen
+        from repro.paths import check_path_batch, edge_weight_map
+        from repro.shard import ShardedIndex
+
+        n, src, dst, w = gen.er_graph(400, 2.5, seed=5)
+        idx = ISLabelIndex.build(n, src, dst, w,
+                                 IndexConfig(l_cap=128, label_chunk=128))
+        sidx = ShardedIndex.from_index(idx, 4, strategy="level")
+        r = np.random.default_rng(1)
+        s = r.integers(0, n, 64).astype(np.int32)
+        t = r.integers(0, n, 64).astype(np.int32)
+        a = idx.path_engine().path_batch_fn(128)(s, t)
+        b = sidx.path_engine().path_batch_fn(128)(s, t)
+        for f in ("dist", "verts", "weights", "lens", "ok"):
+            assert np.array_equal(np.asarray(getattr(a, f)),
+                                  np.asarray(getattr(b, f)),
+                                  equal_nan=True), f
+        rep = check_path_batch(edge_weight_map(src, dst, w), s, t, b)
+        assert rep["violations"] == [], rep["violations"][:5]
+        print("P4 path parity OK")
+    """)
+
+
+# ------------------------------------------------------------ directed
+def test_directed_paths_valid():
+    from repro.core.directed import DiISLabelIndex
+    rng = np.random.default_rng(4)
+    n = 150
+    src = rng.integers(0, n, 600).astype(np.int32)
+    dst = rng.integers(0, n, 600).astype(np.int32)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = rng.integers(1, 5, len(src)).astype(np.float32)
+    idx = DiISLabelIndex.build(n, src, dst, w,
+                               IndexConfig(l_cap=256, label_chunk=128))
+    ed = edge_weight_map(src, dst, w)
+    checked = 0
+    for _ in range(40):
+        s, t = int(rng.integers(0, n)), int(rng.integers(0, n))
+        d, path = idx.shortest_path(s, t)
+        if not np.isfinite(d):
+            assert path == []
+            continue
+        checked += 1
+        assert path[0] == s and path[-1] == t
+        total = 0.0
+        for a, b in zip(path[:-1], path[1:]):
+            assert (a, b) in ed, f"directed path uses non-edge {(a, b)}"
+            total += ed[(a, b)]
+        assert abs(total - d) < 1e-4
+    assert checked > 10
+
+
+# -------------------------------------------- property sweep (weights)
+def _path_property_case(seed, n):
+    n_, src, dst, w = gen.er_graph(n, 2.5, seed=seed)
+    idx = ISLabelIndex.build(n_, src, dst, w,
+                             IndexConfig(l_cap=128, label_chunk=64,
+                                         d_cap=8))
+    edges = edge_weight_map(src, dst, w)
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, n_, 32).astype(np.int32)
+    t = rng.integers(0, n_, 32).astype(np.int32)
+    dist, paths, ok = idx.shortest_paths(s, t, hop_cap=64)
+    assert ok.all()
+    want = np.asarray(idx.query(s, t), np.float32)
+    assert np.array_equal(dist, want, equal_nan=True)
+    for i, p in enumerate(paths):
+        if not np.isfinite(dist[i]):
+            assert p == []
+            continue
+        total = sum(edges[(a, b)] for a, b in zip(p[:-1], p[1:]))
+        # integer weights: the float32 sum is exact, so bitwise
+        assert np.float32(total) == dist[i], (i, total, dist[i])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 500), n=st.integers(40, 120))
+    def test_path_weight_sum_property(seed, n):
+        _path_property_case(seed, n)
+else:
+    @pytest.mark.parametrize("seed,n", [(0, 40), (17, 77), (101, 120)])
+    def test_path_weight_sum_property(seed, n):
+        _path_property_case(seed, n)

@@ -39,6 +39,38 @@ def test_paths_valid_and_tight(built):
     assert checked > 10
 
 
+def test_host_oracle_caches_hoisted_and_invalidated(built):
+    """The satellite fix: host label copies and the sorted core
+    adjacency are computed once, reused across calls, and dropped on
+    in-place mutation (so the oracle never serves stale structure)."""
+    n, src, dst, w, idx, ed = built
+    idx.shortest_path(0, 1)
+    labels = idx._label_host()
+    adj = idx._core_adjacency()
+    # second call reuses the identical cached objects
+    idx.shortest_path(2, 3)
+    assert idx._label_host() is labels
+    assert idx._core_adjacency() is adj
+
+
+def test_oracle_valid_after_delete():
+    n, src, dst, w = gen.grid_graph(8, seed=13)
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=256, label_chunk=64))
+    d0, p0 = idx.shortest_path(0, 63)           # warm the caches
+    u = 27
+    idx.delete_vertex(u)
+    assert idx._host_labels is None and idx._core_adj is None
+    d1, p1 = idx.shortest_path(0, 63)
+    assert np.isfinite(d1) and u not in p1
+    ed = {}
+    for a, b, ww in zip(src, dst, w):
+        if u not in (int(a), int(b)):
+            ed[(int(a), int(b))] = float(ww)
+    total = sum(ed[(a, b)] for a, b in zip(p1[:-1], p1[1:]))
+    assert abs(total - d1) < 1e-4
+
+
 def test_save_load_roundtrip(tmp_path, built):
     n, src, dst, w, idx, _ = built
     idx.save(tmp_path / "idx")

@@ -204,7 +204,7 @@ def test_serve_metrics_snapshot_and_json(index, server):
         assert key in snap
     assert snap["served"] > 0 and snap["qps_compute"] > 0
     assert 0 < snap["batch_fill_ratio"] <= 1
-    assert set(snap["lanes"]) == {"mu", "full"}
+    assert set(snap["lanes"]) == {"mu", "full", "path"}
     doc = json.loads(server.metrics.to_json(extra_field=1))
     assert doc["extra_field"] == 1 and doc["served"] == snap["served"]
 
