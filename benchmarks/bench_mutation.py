@@ -1,0 +1,138 @@
+"""Mutation-under-traffic benchmark: the §8.3 readwrite scenario
+through a versioned `DistanceServer` (docs/MUTATION.md). Reports swap
+latency percentiles, read latency during writes, and sustained QPS,
+and embeds two exactness gates that raise AssertionError on failure
+(so `benchmarks.run` exits nonzero):
+
+  * zero compiled-shape growth across every version swap, and
+  * served reads on the final version bitwise-equal to a from-scratch
+    `ISLabelIndex.build` over the mutated edge set.
+
+Results accumulate in ``BENCH_mutation.json``.
+
+  PYTHONPATH=src python -m benchmarks.bench_mutation [--full]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _mirror_edges(n, src, dst, w, writes):
+    """Replay a trace's write batches onto host edge lists, the same
+    bookkeeping the launcher's ``--audit rebuild`` uses."""
+    es = [int(x) for x in src] + [int(x) for x in dst]
+    ed = [int(x) for x in dst] + [int(x) for x in src]
+    ew = [float(x) for x in w] * 2
+    live: list[int] = []
+    for ops in writes:
+        if not ops:
+            continue
+        for op in ops:
+            if op.kind == "insert":
+                for v, wt in zip(op.nbrs, op.ws):
+                    es += [op.u, int(v)]
+                    ed += [int(v), op.u]
+                    ew += [float(wt), float(wt)]
+                live.append(op.u)
+            else:
+                keep = [i for i in range(len(es))
+                        if es[i] != op.u and ed[i] != op.u]
+                es = [es[i] for i in keep]
+                ed = [ed[i] for i in keep]
+                ew = [ew[i] for i in keep]
+                live.remove(op.u)
+    return (np.asarray(es, np.int32), np.asarray(ed, np.int32),
+            np.asarray(ew, np.float32), live)
+
+
+def main(full: bool = False) -> None:
+    from repro.core import ISLabelIndex, IndexConfig
+    from repro.graphs import generators as gen
+    from repro.serve import DistanceServer, make_trace
+
+    if full:
+        n_base, n_req, spares, write_ratio = 1 << 10, 4096, 32, 0.04
+    else:
+        n_base, n_req, spares, write_ratio = 160, 420, 12, 0.06
+    nb, src, dst, w = gen.er_graph(n_base, 2.4, seed=3)
+    n = nb + spares
+    cfg = IndexConfig(l_cap=256, label_chunk=128)
+    idx = ISLabelIndex.build(n, src, dst, w, cfg)
+
+    server = DistanceServer(idx, buckets=(16, 64), max_wait_ms=2.0,
+                            cache_size=4096, versioned=True)
+    server.warmup()
+    pre = server.compile_cache_sizes()
+    trace = make_trace("readwrite", n=n, num_requests=n_req,
+                       rate_qps=50_000.0, seed=0, write_ratio=write_ratio,
+                       n_read=nb, spares=range(nb, n),
+                       attach_to=idx.core_ids)
+    answers, vids = server.serve_readwrite_trace(trace)
+    post = server.compile_cache_sizes()
+    snap = server.stats()
+
+    assert post == pre, \
+        f"recompiles during readwrite serving: {pre} -> {post}"
+
+    # Exactness gate: a fresh read batch on the final live version must
+    # match a from-scratch rebuild of the mutated graph bitwise.
+    es, ed, ew, live = _mirror_edges(n, src, dst, w, trace.writes)
+    ref = ISLabelIndex.build(n, es, ed, ew, cfg)
+    rng = np.random.default_rng(7)
+    q = 256 if not full else 1024
+    qs = rng.integers(0, nb, q).astype(np.int32)
+    qt = rng.integers(0, nb, q).astype(np.int32)
+    if live:
+        qs[: len(live)] = np.asarray(live, np.int32)
+    check = make_trace("uniform", n=nb, num_requests=q, rate_qps=50_000.0,
+                       seed=1)
+    check.s[:], check.t[:] = qs, qt
+    got = server.serve_trace(check)
+    want = np.asarray(ref.engine.query(qs, qt), np.float32)
+    ok = np.array_equal(got, want)
+    assert ok, (
+        f"final-version served reads != scratch rebuild "
+        f"({int(np.sum(got != want))}/{q} mismatches)")
+    post2 = server.compile_cache_sizes()
+    assert post2 == pre, \
+        f"recompiles on post-swap read batch: {pre} -> {post2}"
+    server.drain()
+
+    sw = snap["swap_ms"]
+    meta = trace.meta
+    us = 1e6 / snap["qps_compute"] if snap["qps_compute"] else 0.0
+    common.row("mutation", "readwrite-full" if full else "readwrite", us,
+               qps=round(snap["qps_compute"]),
+               p99_ms=round(snap["latency_ms"]["p99"], 2),
+               swaps=snap["mutations"],
+               ops=snap["mutation_ops"],
+               swap_p50_ms=round(sw["p50"], 2),
+               swap_p95_ms=round(sw["p95"], 2))
+    common.write_json("mutation", {
+        "graph": {"kind": "er10" if full else "er160", "n": int(n),
+                  "n_read": int(nb), "m": int(len(src)),
+                  "spares": int(spares)},
+        "index": {"k": idx.k, "n_core": int(idx.stats.n_core),
+                  "core_cap": snap["versions"]["core_cap"],
+                  "edge_cap": snap["versions"]["edge_cap"]},
+        "full": full,
+        "trace": {"requests": n_req, "write_ratio": write_ratio,
+                  "writes": meta["writes"], "inserts": meta["inserts"],
+                  "deletes": meta["deletes"]},
+        "qps_compute": snap["qps_compute"],
+        "latency_ms": snap["latency_ms"],
+        "swap_ms": sw,
+        "mutations": snap["mutations"],
+        "mutation_ops": snap["mutation_ops"],
+        "compiled_shapes": {"before": pre, "after": post2},
+        "exactness": {"final_version_bitwise": bool(ok),
+                      "checked_reads": int(q),
+                      "live_inserted": len(live)},
+    })
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -28,9 +28,9 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (bench_baselines, bench_construction,
-                            bench_k_sweep, bench_kernels, bench_path,
-                            bench_query, bench_serving, bench_shard,
-                            common, roofline_report)
+                            bench_k_sweep, bench_kernels, bench_mutation,
+                            bench_path, bench_query, bench_serving,
+                            bench_shard, common, roofline_report)
     suites = {
         "table3_construction": bench_construction.main,
         "table4_5_query": bench_query.main,
@@ -40,6 +40,7 @@ def main() -> int:
         "serving": bench_serving.main,
         "shard": bench_shard.main,
         "path": bench_path.main,
+        "mutation": bench_mutation.main,
         "roofline": roofline_report.main,
     }
     common.OUT_DIR = args.out

@@ -251,96 +251,44 @@ class ISLabelIndex:
                     frontier.append(c)
         return out
 
-    def insert_vertex(self, u: int, nbrs, ws):
+    def insert_vertex(self, u: int, nbrs, ws) -> np.ndarray:
         """§8.3 lazy insert: u joins G_k; label entries (u, d) pushed to the
-        descendants of its non-core neighbors. Host-side, rebuild-free."""
-        assert u < self.n, "grow n before inserting (id must be preallocated)"
+        descendants of its non-core neighbors. Host-side, rebuild-free.
+        Returns the touched label rows (sorted vertex ids)."""
         ids_h = np.array(self.lbl_ids)          # writable host copies
         d_h = np.array(self.lbl_d)
         pred_h = np.array(self.lbl_pred)
-        self.level[u] = self.k
-        new_core_edges = ([], [], [])
-        # u itself becomes a core vertex with self label
-        self._set_label_entry(ids_h, d_h, pred_h, u, u, 0.0, -1)
-        for v, wv in zip(nbrs, ws):
-            v = int(v)
-            if self.level[v] == self.k:
-                new_core_edges[0].extend([u, v])
-                new_core_edges[1].extend([v, u])
-                new_core_edges[2].extend([float(wv), float(wv)])
-            else:
-                # add (u, w) to label(v) and propagate to v's descendants
-                self._push_entry(ids_h, d_h, pred_h, v, u, float(wv), v)
-        if new_core_edges[0]:
-            self.core_src = np.concatenate(
-                [self.core_src, np.asarray(new_core_edges[0], np.int32)])
-            self.core_dst = np.concatenate(
-                [self.core_dst, np.asarray(new_core_edges[1], np.int32)])
-            self.core_w = np.concatenate(
-                [self.core_w, np.asarray(new_core_edges[2], np.float32)])
-            self.core_via = np.concatenate(
-                [self.core_via, np.full(len(new_core_edges[0]), -1, np.int32)])
-        if self.level[u] == self.k and u not in set(self.core_ids.tolist()):
-            self.core_ids = np.concatenate(
-                [self.core_ids, np.asarray([u], np.int32)])
+        rows = apply_insert_host(self, ids_h, d_h, pred_h, u, nbrs, ws)
         self._refresh_device(ids_h, d_h, pred_h)
+        return rows
 
-    def _push_entry(self, ids_h, d_h, pred_h, v, u, d, pred):
-        """Insert/improve (u, d) in label(v), then relax v's descendants."""
-        changed = self._set_label_entry(ids_h, d_h, pred_h, v, u, d, pred)
-        if not changed:
-            return
-        for child, wc in self._children_of(v):
-            self._push_entry(ids_h, d_h, pred_h, child, u, d + wc, v)
-
-    def _children_of(self, v):
-        out = []
-        rows, slots = np.nonzero(self.up_ids[:self.n] == v)
-        for r, sl in zip(rows, slots):
-            out.append((int(r), float(self.up_w[r, sl])))
-        return out
-
-    def _set_label_entry(self, ids_h, d_h, pred_h, v, u, d, pred) -> bool:
-        row = ids_h[v]
-        j = np.searchsorted(row, u)
-        if j < row.shape[0] and row[j] == u:
-            if d_h[v, j] <= d:
-                return False
-            d_h[v, j] = d
-            pred_h[v, j] = pred
-            return True
-        if row[-1] < self.n:
-            raise RuntimeError("label row full: raise l_cap and rebuild")
-        ids_h[v] = np.insert(row, j, u)[:-1]
-        d_h[v] = np.insert(d_h[v], j, d)[:-1]
-        pred_h[v] = np.insert(pred_h[v], j, pred)[:-1]
-        return True
-
-    def delete_vertex(self, u: int):
+    def delete_vertex(self, u: int) -> np.ndarray:
         """§8.3 lazy delete: drop u's core edges and its entries in the
-        labels of all descendants."""
+        labels of all descendants. Returns the touched label rows."""
         ids_h = np.array(self.lbl_ids)          # writable host copies
         d_h = np.array(self.lbl_d)
         pred_h = np.array(self.lbl_pred)
-        keep = (self.core_src != u) & (self.core_dst != u)
-        self.core_src, self.core_dst = self.core_src[keep], self.core_dst[keep]
-        self.core_w, self.core_via = self.core_w[keep], self.core_via[keep]
-        rows = np.unique(np.nonzero(ids_h[:self.n] == u)[0])
-        for v in rows:
-            j = np.searchsorted(ids_h[v], u)
-            ids_h[v] = np.concatenate([np.delete(ids_h[v], j), [self.n]])
-            d_h[v] = np.concatenate([np.delete(d_h[v], j), [np.inf]])
-            pred_h[v] = np.concatenate([np.delete(pred_h[v], j), [-1]])
-        self.level[u] = self.k  # orphaned; queries fall back to core/∞
+        rows = apply_delete_host(self, ids_h, d_h, pred_h, u)
         self._refresh_device(ids_h, d_h, pred_h)
+        return rows
 
     def _refresh_device(self, ids_h, d_h, pred_h):
-        self.lbl_ids = jnp.asarray(ids_h)
-        self.lbl_d = jnp.asarray(d_h)
-        self.lbl_pred = jnp.asarray(pred_h)
-        # invalidate the host-oracle and path-engine caches: labels
-        # and/or the core edge arrays just changed
-        self._host_labels = None
+        """Upload mutated host label arrays and rebuild the engine. The
+        fresh host copies seed the host-label cache (they ARE the new
+        labels — no device round trip on the next oracle call)."""
+        self._install_labels(jnp.asarray(ids_h), jnp.asarray(d_h),
+                             jnp.asarray(pred_h), host=(ids_h, d_h, pred_h))
+
+    def _install_labels(self, lbl_ids, lbl_d, lbl_pred, host=None):
+        """Install new device label arrays + rebuild the core maps and
+        the query engine. ``host`` (matching host copies) seeds the
+        hoisted host-label cache; the core-adjacency and path-engine
+        caches are always dropped — the core edge arrays may have
+        changed alongside the labels."""
+        self.lbl_ids = lbl_ids
+        self.lbl_d = lbl_d
+        self.lbl_pred = lbl_pred
+        self._host_labels = host
         self._core_adj = None
         self._paths = None
         core_ids = np.flatnonzero(self.level == self.k).astype(np.int32)
@@ -387,3 +335,112 @@ class ISLabelIndex:
             jnp.asarray(z["lbl_pred"]), cfg, m_input=meta["stats"]["m"])
         idx.stats = BuildStats(**meta["stats"])
         return idx
+
+
+# ------------------------------------------------------------------------
+# §8.3 host mutators, shared by ISLabelIndex (in-place), the versioned
+# serving store (repro.serve.versions — copy-on-write apply), and
+# ShardedIndex.apply_mutations. ``st`` is any object carrying the graph
+# structure the lazy update rules read and rewrite:
+#   n, k, level (mutated), up_ids, up_w (read),
+#   core_src/core_dst/core_w/core_via, core_ids (rebound, never mutated).
+# The label arrays are writable host copies, mutated in place. Both
+# functions return the touched label rows (sorted int64 vertex ids) so
+# callers can propagate the change incrementally (device scatter /
+# per-shard block update) instead of re-uploading the full table.
+
+
+def _children_of_host(st, v):
+    """(child, w) pairs over up-edges into v — label(child) merges
+    label(v) + w, so a pushed entry relaxes down the same edges."""
+    out = []
+    rows, slots = np.nonzero(st.up_ids[:st.n] == v)
+    for r, sl in zip(rows, slots):
+        out.append((int(r), float(st.up_w[r, sl])))
+    return out
+
+
+def _set_label_entry_host(st, ids_h, d_h, pred_h, v, u, d, pred,
+                          touched) -> bool:
+    row = ids_h[v]
+    j = np.searchsorted(row, u)
+    if j < row.shape[0] and row[j] == u:
+        if d_h[v, j] <= d:
+            return False
+        d_h[v, j] = d
+        pred_h[v, j] = pred
+        touched.add(int(v))
+        return True
+    if row[-1] < st.n:
+        raise RuntimeError("label row full: raise l_cap and rebuild")
+    ids_h[v] = np.insert(row, j, u)[:-1]
+    d_h[v] = np.insert(d_h[v], j, d)[:-1]
+    pred_h[v] = np.insert(pred_h[v], j, pred)[:-1]
+    touched.add(int(v))
+    return True
+
+
+def _push_entry_host(st, ids_h, d_h, pred_h, v, u, d, pred, touched):
+    """Insert/improve (u, d) in label(v), then relax v's descendants."""
+    if not _set_label_entry_host(st, ids_h, d_h, pred_h, v, u, d, pred,
+                                 touched):
+        return
+    for child, wc in _children_of_host(st, v):
+        _push_entry_host(st, ids_h, d_h, pred_h, child, u, d + wc, v, touched)
+
+
+def apply_insert_host(st, ids_h, d_h, pred_h, u: int, nbrs, ws,
+                      touched: set | None = None) -> np.ndarray:
+    """§8.3 lazy insert on host label copies; returns touched rows."""
+    assert u < st.n, "grow n before inserting (id must be preallocated)"
+    touched = set() if touched is None else touched
+    st.level[u] = st.k
+    new_core_edges = ([], [], [])
+    # u itself becomes a core vertex with self label
+    _set_label_entry_host(st, ids_h, d_h, pred_h, u, u, 0.0, -1, touched)
+    for v, wv in zip(nbrs, ws):
+        v = int(v)
+        if st.level[v] == st.k:
+            new_core_edges[0].extend([u, v])
+            new_core_edges[1].extend([v, u])
+            new_core_edges[2].extend([float(wv), float(wv)])
+        else:
+            # add (u, w) to label(v) and propagate to v's descendants
+            _push_entry_host(st, ids_h, d_h, pred_h, v, u, float(wv), v,
+                             touched)
+    if new_core_edges[0]:
+        st.core_src = np.concatenate(
+            [st.core_src, np.asarray(new_core_edges[0], np.int32)])
+        st.core_dst = np.concatenate(
+            [st.core_dst, np.asarray(new_core_edges[1], np.int32)])
+        st.core_w = np.concatenate(
+            [st.core_w, np.asarray(new_core_edges[2], np.float32)])
+        st.core_via = np.concatenate(
+            [st.core_via, np.full(len(new_core_edges[0]), -1, np.int32)])
+    if st.level[u] == st.k and u not in set(st.core_ids.tolist()):
+        st.core_ids = np.concatenate(
+            [st.core_ids, np.asarray([u], np.int32)])
+    return np.asarray(sorted(touched), np.int64)
+
+
+def apply_delete_host(st, ids_h, d_h, pred_h, u: int,
+                      touched: set | None = None) -> np.ndarray:
+    """§8.3 lazy delete on host label copies; returns touched rows.
+
+    Exact inverse of ``apply_insert_host`` when u was previously
+    inserted (every mutated entry carries ancestor id u); conservative
+    — never under-reports a distance — for build-time vertices (see
+    tests/test_paths_updates.py and docs/MUTATION.md)."""
+    touched = set() if touched is None else touched
+    keep = (st.core_src != u) & (st.core_dst != u)
+    st.core_src, st.core_dst = st.core_src[keep], st.core_dst[keep]
+    st.core_w, st.core_via = st.core_w[keep], st.core_via[keep]
+    rows = np.unique(np.nonzero(ids_h[:st.n] == u)[0])
+    for v in rows:
+        j = np.searchsorted(ids_h[v], u)
+        ids_h[v] = np.concatenate([np.delete(ids_h[v], j), [st.n]])
+        d_h[v] = np.concatenate([np.delete(d_h[v], j), [np.inf]])
+        pred_h[v] = np.concatenate([np.delete(pred_h[v], j), [-1]])
+        touched.add(int(v))
+    st.level[u] = st.k  # orphaned; queries fall back to core/∞
+    return np.asarray(sorted(touched), np.int64)

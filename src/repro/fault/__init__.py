@@ -1,2 +1,5 @@
 from repro.fault.runner import FaultTolerantRunner, RunnerConfig
-from repro.fault.stragglers import StragglerMonitor
+from repro.fault.stragglers import HostTimingAggregator, StragglerMonitor
+
+__all__ = ["FaultTolerantRunner", "RunnerConfig", "HostTimingAggregator",
+           "StragglerMonitor"]

@@ -34,6 +34,21 @@
 
   PYTHONPATH=src python -m repro.launch.serve --mode path \
       --graph er --n 512 --queries 512 --audit dijkstra
+
+* ``--mode mutate``: live §8.3 mutation under traffic (docs/MUTATION.md):
+  a *versioned* server replays a ``readwrite`` trace — reads micro-batch
+  as usual, write rows apply insert/delete batches copy-on-write and
+  hot-swap the published index version between micro-batches. The run
+  asserts the compiled-shape counts did not grow across the whole
+  replay (zero recompiles under writes). ``--audit rebuild`` replays
+  the mutation log against from-scratch index rebuilds and demands
+  every served read be bitwise-equal to the rebuilt index's answer for
+  the exact version that served it. Nonzero exit on any mismatch,
+  recompile, or zero QPS (the CI mutation smoke step).
+
+  PYTHONPATH=src python -m repro.launch.serve --mode mutate \
+      --graph er --n 256 --queries 512 --write-ratio 0.06 \
+      --spares 12 --audit rebuild
 """
 from __future__ import annotations
 
@@ -193,9 +208,121 @@ def serve_distance(args, paths: bool = False) -> int:
     return failures
 
 
+def _audit_rebuild(args, n, src, dst, w, trace, served, vids) -> int:
+    """Differential rebuild audit for ``--mode mutate``: walk the trace
+    in order, mirror every write batch into an edge-list model of the
+    evolving graph, and for each version segment that served reads,
+    rebuild an index from scratch on the mirrored graph and demand
+    bitwise equality with the served answers."""
+    from repro.core import ISLabelIndex, IndexConfig
+    cur_src = [int(a) for a in src]
+    cur_dst = [int(b) for b in dst]
+    cur_w = [float(x) for x in w]
+    bad = rebuilds = audited = 0
+    seg: list[int] = []
+
+    def flush(seg):
+        nonlocal bad, rebuilds, audited
+        if not seg:
+            return
+        rebuilds += 1
+        ref_idx = ISLabelIndex.build(
+            n, np.asarray(cur_src, np.int32), np.asarray(cur_dst, np.int32),
+            np.asarray(cur_w, np.float32),
+            IndexConfig(l_cap=args.l_cap, label_chunk=args.label_chunk))
+        s = trace.s[seg]
+        t = trace.t[seg]
+        want = np.asarray(ref_idx.engine.query(
+            s, t, backend=args.backend or None), np.float32)
+        got = served[seg]
+        bad += int((~((got == want)
+                      | (np.isinf(got) & np.isinf(want)))).sum())
+        audited += len(seg)
+
+    for i in range(len(trace)):
+        if trace.writes[i] is None:
+            seg.append(i)
+            continue
+        flush(seg)
+        seg = []
+        for op in trace.writes[i]:
+            u = int(op.u)
+            if op.kind == "insert":
+                for v, wv in zip(op.nbrs, op.ws):
+                    cur_src += [u, int(v)]
+                    cur_dst += [int(v), u]
+                    cur_w += [float(wv), float(wv)]
+            else:
+                keep = [j for j in range(len(cur_src))
+                        if cur_src[j] != u and cur_dst[j] != u]
+                cur_src = [cur_src[j] for j in keep]
+                cur_dst = [cur_dst[j] for j in keep]
+                cur_w = [cur_w[j] for j in keep]
+    flush(seg)
+    if bad:
+        print(f"  AUDIT FAIL: {bad}/{audited} served reads differ from "
+              f"the from-scratch rebuild of their version")
+        return 1
+    print(f"  audit[rebuild]: {audited} served reads bitwise-equal to "
+          f"{rebuilds} from-scratch rebuilds across "
+          f"{int(vids.max()) + 1} versions")
+    return 0
+
+
+def serve_mutate(args) -> int:
+    from repro.core import ISLabelIndex, IndexConfig
+    from repro.serve import IndexRegistry, make_trace
+
+    n_base, src, dst, w = _build_graph(args)
+    n = n_base + args.spares
+    print(f"[serve-mutate] graph {args.graph} n={n_base} "
+          f"(+{args.spares} spares) m={len(src)}")
+    t0 = time.time()
+    idx = ISLabelIndex.build(
+        n, src, dst, w,
+        IndexConfig(l_cap=args.l_cap, label_chunk=args.label_chunk))
+    print(f"  index built in {time.time() - t0:.1f}s: {idx.stats.summary()}")
+
+    registry = IndexRegistry()
+    server = registry.register(
+        args.index_name, idx,
+        buckets=tuple(int(b) for b in args.buckets.split(",")),
+        max_wait_ms=args.max_wait_ms, cache_size=args.cache,
+        backend=args.backend or None, versioned=True)
+    print(f"  warmed {server.compile_cache_sizes()} shapes "
+          f"in {server.warmup_seconds:.1f}s")
+
+    trace = make_trace("readwrite", n=n, num_requests=args.queries,
+                       rate_qps=args.rate, seed=args.seed,
+                       write_ratio=args.write_ratio, n_read=n_base,
+                       spares=range(n_base, n), attach_to=idx.core_ids)
+    print(f"  trace: {trace.meta}")
+    shapes_before = server.compile_cache_sizes()
+    served, vids = server.serve_readwrite_trace(trace)
+    shapes_after = server.compile_cache_sizes()
+    stats = server.stats()
+    print(json.dumps(stats, indent=2, sort_keys=True))
+
+    failures = 0
+    if shapes_after != shapes_before:
+        print(f"  AUDIT FAIL: compiled shapes grew under writes: "
+              f"{shapes_before} -> {shapes_after}")
+        failures += 1
+    else:
+        print(f"  audit[compile]: zero recompiles across "
+              f"{stats['mutations']} version swaps")
+    if args.audit == "rebuild":
+        failures += _audit_rebuild(args, n, src, dst, w, trace, served,
+                                   vids)
+    if stats["qps_compute"] <= 0:
+        print("  AUDIT FAIL: zero QPS")
+        failures += 1
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "distance", "path"],
+    ap.add_argument("--mode", choices=["lm", "distance", "path", "mutate"],
                     default="distance")
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--batch", type=int, default=256)
@@ -217,8 +344,21 @@ def main():
     ap.add_argument("--cache", type=int, default=65536)
     ap.add_argument("--backend", default="",
                     help="kernel backend override (auto if empty)")
-    ap.add_argument("--audit", choices=["index", "dijkstra", "none"],
-                    default="index")
+    ap.add_argument("--audit", choices=["index", "dijkstra", "rebuild",
+                                        "none"],
+                    default="index",
+                    help="rebuild (--mode mutate): per-version "
+                         "from-scratch rebuild differential audit")
+    ap.add_argument("--write-ratio", type=float, default=0.05,
+                    help="--mode mutate: fraction of requests that are "
+                         "§8.3 write batches")
+    ap.add_argument("--spares", type=int, default=16,
+                    help="--mode mutate: preallocated vertex ids for "
+                         "live inserts")
+    ap.add_argument("--label-chunk", type=int, default=128,
+                    help="--mode mutate: IndexConfig.label_chunk for the "
+                         "served index and the rebuild-audit indexes "
+                         "(small keeps the repeated tiny rebuilds cheap)")
     ap.add_argument("--audit-sample", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--shards", type=int, default=0,
@@ -233,6 +373,8 @@ def main():
     args = ap.parse_args()
     if args.mode == "lm":
         serve_lm(args)
+    elif args.mode == "mutate":
+        raise SystemExit(serve_mutate(args))
     else:
         raise SystemExit(serve_distance(args, paths=args.mode == "path"))
 

@@ -1,16 +1,22 @@
 # repro.serve — the distance/path-serving subsystem over ISLabelIndex:
 # shape-bucket micro-batching, μ-exact routing, LRU caching, metrics,
-# a multi-graph registry, a scenario load generator, and a batched
-# shortest-path lane (docs/PATHS.md).
+# a multi-graph registry, a scenario load generator, a batched
+# shortest-path lane (docs/PATHS.md), and versioned copy-on-write
+# index mutation under live traffic (docs/MUTATION.md).
 from repro.serve.batcher import Batch, MicroBatcher, PendingRequest
 from repro.serve.cache import LRUCache
 from repro.serve.engine import DistanceServer, PathAnswer, mu_exact_mask
 from repro.serve.loadgen import SCENARIOS, Trace, make_trace
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import IndexRegistry
+from repro.serve.versions import (FamilyCapacityError, IndexVersion,
+                                  LabelBlockStore, MutationOp, VersionFamily,
+                                  VersionManager, VersionState)
 
 __all__ = [
     "Batch", "MicroBatcher", "PendingRequest", "LRUCache",
     "DistanceServer", "PathAnswer", "mu_exact_mask", "SCENARIOS", "Trace",
-    "make_trace", "ServeMetrics", "IndexRegistry",
+    "make_trace", "ServeMetrics", "IndexRegistry", "FamilyCapacityError",
+    "IndexVersion", "LabelBlockStore", "MutationOp", "VersionFamily",
+    "VersionManager", "VersionState",
 ]

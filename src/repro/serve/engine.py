@@ -45,6 +45,21 @@ tiers when a path overflows — falling back to the exact host oracle
 Path answers are cached separately from distances (a path is a
 strictly larger object with its own hit economics).
 
+Mutation lane (versioned mode). Constructing with ``versioned=True``
+routes the compiled entry points through a ``VersionFamily``
+(docs/MUTATION.md): the jitted fns take the index state as a traced
+pytree argument instead of closing over it, so ``submit_mutation``
+applies a §8.3 insert/delete batch copy-on-write, hot-swaps the
+published version between micro-batches, and the pre-warmed
+executables survive — zero recompiles under concurrent read/write
+traffic. Pending read batches are force-flushed before the swap (they
+complete on the version current when they were submitted), the LRU
+cache and routing mask are per-version (cleared/replaced on swap), and
+old versions are refcount-drained before release. Versioned mode is
+unsharded-distance-only: the path lane and ``ShardedIndex`` keep the
+close-over-arrays entry points (mutate via
+``ShardedIndex.apply_mutations`` + re-register).
+
 The engine is clock-driven and deterministic: callers pass ``now``
 (simulated or wall time) to ``submit``/``pump``. ``serve_trace`` replays
 a loadgen trace on its own clock — queue waits come from the trace
@@ -105,7 +120,8 @@ class DistanceServer:
                  buckets=(64, 256, 1024), max_wait_ms: float = 2.0,
                  cache_size: int = 65536, cache_symmetric: bool = False,
                  backend: str | None = None, warmup: bool = True,
-                 path_hop_caps=None):
+                 path_hop_caps=None, versioned: bool = False,
+                 version_kwargs: dict | None = None):
         self.index = index
         self.name = name
         self.buckets = tuple(sorted(int(b) for b in buckets))
@@ -115,9 +131,26 @@ class DistanceServer:
         self.cache = LRUCache(cache_size, symmetric=cache_symmetric)
         self.lanes = {lane: MicroBatcher(self.buckets, self.max_wait_s)
                       for lane in LANES}
-        self._no_core_entry = mu_exact_mask(index)
-        self._fns = {"mu": index.engine.mu_batch_fn(backend),
-                     "full": index.engine.batch_fn(backend)}
+        self.versions = None
+        if versioned:
+            if path_hop_caps:
+                raise ValueError(
+                    "versioned serving does not cover the path lane; "
+                    "serve paths from a non-versioned server")
+            if hasattr(index, "num_shards"):
+                raise ValueError(
+                    "versioned serving is unsharded-only; mutate a "
+                    "ShardedIndex via apply_mutations and re-register")
+            from repro.serve.versions import VersionManager
+            self.versions = VersionManager.from_index(
+                index, **(version_kwargs or {}))
+            self._no_core_entry = self.versions.current.mu_mask
+            self._fns = {"mu": self.versions.family.mu_fn(backend),
+                         "full": self.versions.family.full_fn(backend)}
+        else:
+            self._no_core_entry = mu_exact_mask(index)
+            self._fns = {"mu": index.engine.mu_batch_fn(backend),
+                         "full": index.engine.batch_fn(backend)}
         self.path_hop_caps = (tuple(sorted(int(h) for h in path_hop_caps))
                               if path_hop_caps else ())
         self._path_fns = {}
@@ -143,6 +176,9 @@ class DistanceServer:
         answer, recomputes the routing mask, and rebinds (and by
         default re-warms) the compiled entry points — the mutators
         install a fresh ``QueryEngine``."""
+        if self.versions is not None:
+            raise ValueError("versioned server: mutate through "
+                             "submit_mutation(ops, now) instead")
         self.cache.clear()
         self._no_core_entry = mu_exact_mask(self.index)
         self._fns = {"mu": self.index.engine.mu_batch_fn(self.backend),
@@ -162,7 +198,10 @@ class DistanceServer:
         jit cache sizes). With a path lane, every (bucket, hop_cap)
         tier is pre-compiled too."""
         t0 = time.perf_counter()
-        timings = self.index.engine.warmup(self.buckets, self.backend)
+        if self.versions is not None:
+            timings = self.versions.warmup(self.buckets, self.backend)
+        else:
+            timings = self.index.engine.warmup(self.buckets, self.backend)
         if self.path_hop_caps:
             timings.update(self.index.path_engine().warmup(
                 self.buckets, self.path_hop_caps, self.backend))
@@ -269,10 +308,16 @@ class DistanceServer:
 
     def _execute(self, lane: str, batch) -> int:
         reqs, p, s_pad, t_pad = self._batch_arrays(batch)
+        version = None if self.versions is None else self.versions.acquire()
         t0 = time.perf_counter()
-        out = self._fns[lane](s_pad, t_pad)
+        if version is not None:
+            out = self._fns[lane](version.state, s_pad, t_pad)
+        else:
+            out = self._fns[lane](s_pad, t_pad)
         out = jax.block_until_ready(out)
         exec_s = time.perf_counter() - t0
+        if version is not None:
+            self.versions.release(version)
         if lane == "full":
             ans, rounds = np.asarray(out[0]), int(out[1])
         else:
@@ -337,6 +382,78 @@ class DistanceServer:
                                   int(out.rounds))
         return p
 
+    # ----------------------------------------------------- mutation lane
+    def submit_mutation(self, ops, now: float):
+        """Apply a §8.3 insert/delete batch between micro-batches.
+
+        Pending read batches are force-flushed first, so every already-
+        submitted request completes on the version that was current at
+        its submit time (hot-swap atomicity). Then the batch applies
+        copy-on-write, the new version publishes atomically, the
+        per-version caches (LRU answers, routing mask, the host oracle
+        the audits read via ``self.index``) move to the new version, and
+        the old version is retired — dropped now if no reader pins it,
+        else when the last in-flight ``release`` lands. The compiled
+        entry points are untouched: same family, same shapes, zero
+        recompiles. Returns the new ``IndexVersion``."""
+        if self.versions is None:
+            raise ValueError("server not versioned: pass versioned=True "
+                             "(or use ISLabelIndex.insert_vertex + "
+                             "refresh() and eat the recompiles)")
+        self.pump(now, force=True)
+        old = self.versions.current
+        version = self.versions.apply(ops)
+        self.index = version.index
+        self._no_core_entry = version.mu_mask
+        self.cache.clear()
+        self.versions.retire(old)
+        self.metrics.record_mutation(len(ops), version.swap_seconds)
+        return version
+
+    def drain(self, now: float | None = None) -> int:
+        """Flush every pending batch and retire all non-current
+        versions. Returns requests completed; raises if a retired
+        version is still pinned (a reader leaked an ``acquire``)."""
+        done = self.pump(float("inf") if now is None else now, force=True)
+        if self.versions is not None:
+            leftover = self.versions.drain()
+            if leftover:
+                raise RuntimeError(
+                    f"versions {leftover} still pinned after drain")
+        return done
+
+    def serve_readwrite_trace(self, trace):
+        """Replay a ``readwrite`` loadgen trace: reads micro-batch as
+        usual, write rows apply through ``submit_mutation`` on the
+        trace clock. Returns ``(answers float32[R], vids int64[R])`` —
+        NaN answers on write rows, and per-row the version id the
+        request was served under (write rows report the version they
+        published), so a differential audit can replay every read
+        against the exact snapshot that answered it."""
+        if self.versions is None:
+            raise ValueError("serve_readwrite_trace needs versioned=True")
+        if trace.writes is None:
+            raise ValueError("trace has no writes; use serve_trace")
+        n_req = len(trace)
+        rids = np.full(n_req, -1, np.int64)
+        vids = np.zeros(n_req, np.int64)
+        for i in range(n_req):
+            now = float(trace.arrival_s[i])
+            self.pump(now)
+            if trace.writes[i] is not None:
+                vids[i] = self.submit_mutation(trace.writes[i], now).vid
+            else:
+                vids[i] = self.versions.current.vid
+                rids[i] = self.submit(int(trace.s[i]), int(trace.t[i]), now)
+            self.pump(now)
+        self.pump(trace.span_s, force=True)
+        self.metrics.trace_span_s += trace.span_s
+        answers = np.full(n_req, np.nan, np.float32)
+        for i in range(n_req):
+            if rids[i] >= 0:
+                answers[i] = self._results.pop(int(rids[i]))
+        return answers, vids
+
     # ------------------------------------------------------ trace replay
     def _replay(self, trace, submit_fn) -> np.ndarray:
         """Shared replay loop: drive the batcher on the trace's
@@ -396,5 +513,11 @@ class DistanceServer:
             "backend": self.backend or "auto",
             "warmup_seconds": self.warmup_seconds,
             "compiled_shapes": self.compile_cache_sizes(),
+            "versions": (None if self.versions is None else {
+                "current": self.versions.current.vid,
+                "live": self.versions.live_versions(),
+                "core_cap": self.versions.family.core_cap,
+                "edge_cap": self.versions.family.edge_cap,
+            }),
             **self.metrics.snapshot(),
         }

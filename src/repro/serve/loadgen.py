@@ -21,12 +21,21 @@ Scenarios (endpoint distribution × arrival process):
   * ``repeated`` — requests drawn from a small fixed pool of (s, t)
     pairs, Poisson arrivals. Dashboard/monitoring shape; upper-bounds
     cache effectiveness.
+  * ``readwrite`` — uniform reads with §8.3 mutation batches mixed in
+    at ``write_ratio``: inserts draw a vertex from a spare pool and
+    attach it to core vertices (initial core + live inserted — the
+    rebuild-exact domain, docs/MUTATION.md), deletes remove a live
+    inserted vertex back into the pool. Reads never target a dead
+    spare, so every read is rebuild-auditable. Replayed with
+    ``DistanceServer.serve_readwrite_trace`` on a versioned server.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.serve.versions import MutationOp
 
 
 @dataclasses.dataclass
@@ -36,6 +45,9 @@ class Trace:
     s: np.ndarray            # int32[R]
     t: np.ndarray            # int32[R]
     meta: dict
+    # per-request mutation batch: None = read; a list of MutationOp
+    # makes request i a write (s/t are placeholder zeros for writes)
+    writes: list | None = None
 
     def __len__(self) -> int:
         return len(self.arrival_s)
@@ -115,11 +127,82 @@ def repeated_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
         {"n": n, "rate_qps": rate_qps, "seed": seed, "pool": pool})
 
 
+def readwrite_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
+                    seed: int = 0, write_ratio: float = 0.05,
+                    write_batch: int = 2, n_read: int | None = None,
+                    spares=(), attach_to=(), max_deg: int = 3,
+                    max_w: int = 8) -> Trace:
+    """Reads mixed with §8.3 mutation batches (the serving-under-
+    mutation scenario, docs/MUTATION.md).
+
+    ``spares`` are preallocated vertex ids outside the read range that
+    inserts draw from (and deletes return to); ``attach_to`` are the
+    index's initial core ids. The generator mirrors the manager's
+    strict domain: inserts attach only to attach_to + currently-live
+    spares, deletes target only live spares, reads sample the
+    ``n_read`` base vertices (always live) plus occasionally a live
+    spare. Weights are integer-valued floats so float32 path sums stay
+    exact and the rebuild audit can demand bitwise equality.
+    """
+    rng = np.random.default_rng(seed)
+    spares = [int(u) for u in spares]
+    attach = [int(c) for c in attach_to]
+    if write_ratio > 0 and (not spares or not attach):
+        raise ValueError("readwrite with write_ratio > 0 needs spare "
+                         "vertex ids and core attach_to candidates")
+    n_read = n if n_read is None else int(n_read)
+    pool, live = list(spares), []
+    arrivals = _poisson_arrivals(rng, num_requests, rate_qps)
+    s = np.zeros(num_requests, np.int32)
+    t = np.zeros(num_requests, np.int32)
+    writes: list = [None] * num_requests
+    n_writes = n_ins = n_del = 0
+
+    def read_endpoint():
+        if live and rng.random() < 0.15:
+            return int(live[int(rng.integers(0, len(live)))])
+        return int(rng.integers(0, n_read))
+
+    for i in range(num_requests):
+        if rng.random() < write_ratio and (pool or live):
+            ops = []
+            for _ in range(int(rng.integers(1, write_batch + 1))):
+                if pool and (not live or rng.random() < 0.6):
+                    u = pool.pop(int(rng.integers(0, len(pool))))
+                    cands = attach + live
+                    deg = int(rng.integers(1, min(max_deg, len(cands)) + 1))
+                    picks = rng.choice(len(cands), size=deg, replace=False)
+                    ops.append(MutationOp(
+                        "insert", u,
+                        tuple(int(cands[j]) for j in picks),
+                        tuple(float(x)
+                              for x in rng.integers(1, max_w + 1, deg))))
+                    live.append(u)
+                    n_ins += 1
+                elif live:
+                    u = live.pop(int(rng.integers(0, len(live))))
+                    ops.append(MutationOp("delete", u))
+                    pool.append(u)
+                    n_del += 1
+            writes[i] = ops
+            n_writes += 1
+        else:
+            s[i] = read_endpoint()
+            t[i] = read_endpoint()
+    return Trace(
+        "readwrite", arrivals, s, t,
+        {"n": n, "rate_qps": rate_qps, "seed": seed,
+         "write_ratio": write_ratio, "writes": n_writes,
+         "inserts": n_ins, "deletes": n_del, "spares": len(spares)},
+        writes=writes)
+
+
 SCENARIOS = {
     "uniform": uniform_trace,
     "hotspot": hotspot_trace,
     "bursty": bursty_trace,
     "repeated": repeated_trace,
+    "readwrite": readwrite_trace,
 }
 
 

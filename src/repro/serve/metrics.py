@@ -43,6 +43,9 @@ class ServeMetrics:
         self.path_overflows = 0    # hop_cap tier escalations (path lane)
         self.trace_span_s = 0.0
         self.type_counts = {1: 0, 2: 0, 3: 0}   # paper §5.2 endpoint classes
+        self.mutations = 0         # §8.3 write batches (version swaps)
+        self.mutation_ops = 0      # individual insert/delete ops
+        self.swap_seconds: list[float] = []
 
     # ------------------------------------------------------------ record
     def record_batch(self, lane: str, bucket: int, n_real: int,
@@ -61,6 +64,13 @@ class ServeMetrics:
     def record_path_overflow(self) -> None:
         self.path_overflows += 1
 
+    def record_mutation(self, n_ops: int, swap_s: float) -> None:
+        """One applied §8.3 write batch: ``n_ops`` insert/delete ops,
+        ``swap_s`` = copy-on-write apply + hot-swap wall time."""
+        self.mutations += 1
+        self.mutation_ops += int(n_ops)
+        self.swap_seconds.append(float(swap_s))
+
     def record_types(self, classes) -> None:
         for c, cnt in zip(*np.unique(np.asarray(classes), return_counts=True)):
             self.type_counts[int(c)] += int(cnt)
@@ -68,6 +78,7 @@ class ServeMetrics:
     # ----------------------------------------------------------- export
     def snapshot(self) -> dict:
         lat = np.asarray(self.latencies, np.float64)
+        sw = np.asarray(self.swap_seconds, np.float64)
         exec_total = sum(b.exec_s for b in self.batches)
         lanes = {}
         for lane in ("mu", "full", "path"):
@@ -105,6 +116,14 @@ class ServeMetrics:
             "bucket_counts": bucket_counts,
             "lanes": lanes,
             "query_types": {str(k): v for k, v in self.type_counts.items()},
+            "mutations": self.mutations,
+            "mutation_ops": self.mutation_ops,
+            "swap_ms": {
+                "p50": float(np.quantile(sw, 0.50) * 1e3) if len(sw) else 0.0,
+                "p95": float(np.quantile(sw, 0.95) * 1e3) if len(sw) else 0.0,
+                "max": float(sw.max() * 1e3) if len(sw) else 0.0,
+                "mean": float(sw.mean() * 1e3) if len(sw) else 0.0,
+            },
         }
 
     def to_json(self, **extra) -> str:

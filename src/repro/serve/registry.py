@@ -16,14 +16,27 @@ class IndexRegistry:
         self._servers: dict[str, DistanceServer] = {}
 
     def register(self, name: str, index, **server_kwargs) -> DistanceServer:
-        """Wrap ``index`` in a DistanceServer under ``name`` (replacing
-        any previous holder of the name) and return it."""
+        """Wrap ``index`` in a DistanceServer under ``name`` and return
+        it. Replacing an existing holder of the name goes through the
+        version-drain path (``install``) — never a silent swap that
+        drops in-flight requests or leaks pinned versions."""
         server = DistanceServer(index, name=name, **server_kwargs)
+        return self.install(name, server)
+
+    def install(self, name: str, server: DistanceServer) -> DistanceServer:
+        """Atomically publish ``server`` under ``name``. Any previous
+        holder is drained first: its pending batches execute to
+        completion (in-flight requests are answered, on their own
+        versions) and its retired index versions are released. Only
+        then does the name flip to the new server."""
+        old = self._servers.get(name)
+        if old is not None and old is not server:
+            old.drain()
         self._servers[name] = server
         return server
 
     def unregister(self, name: str) -> None:
-        del self._servers[name]
+        self._servers.pop(name).drain()
 
     def get(self, name: str) -> DistanceServer:
         try:

@@ -236,6 +236,119 @@ class ShardedIndex:
         dist, paths, ok = self.shortest_paths([s], [t])
         return float(dist[0]), paths[0]
 
+    # --------------------------------------------------------- mutations
+    def apply_mutations(self, ops):
+        """§8.3 insert/delete batch over the partitioned label blocks.
+
+        Functional: returns ``(new_index, info)`` and leaves this index
+        untouched (callers re-register, e.g. through
+        ``IndexRegistry.install``'s drain path). The shared host
+        mutators (``repro.core.index``) run over the gathered label
+        rows, then the change propagates *per touched row, per owning
+        shard*: a block row is rewritten only where its kept-entry
+        slice actually changed, so a delete of a shard-owned ancestor
+        touches exactly that shard's block while mutated replicated
+        (core-level) entries — every insert, since inserted vertices
+        join the core — rebuild the touched rows of all blocks. Every
+        other block row is bitwise-preserved (asserted in tests).
+
+        The vertex→shard map keeps its original assignment (re-running
+        ``assign_shards`` would reshuffle the round-robin ranks and
+        spuriously migrate untouched entries); inserted vertices become
+        core and are marked REPLICATED. The rebuilt
+        ``ShardedQueryEngine`` compiles fresh entry points — sharded
+        mutation is a swap-and-rewarm operation, not a zero-recompile
+        one (docs/MUTATION.md).
+
+        ``info``: {"touched_rows", "touched_shards", "inserted"}.
+        """
+        from types import SimpleNamespace
+
+        from repro.core.index import apply_delete_host, apply_insert_host
+        from repro.shard.partition import REPLICATED
+        if self.up_ids is None:
+            raise ValueError(
+                "this ShardedIndex was saved without the up-edge "
+                "matrices; §8.3 mutations need them — rebuild with "
+                "ShardedIndex.from_index")
+        ids_h, d_h, pred_h = self.gather_label_rows()
+        st = SimpleNamespace(
+            n=self.n, k=self.k, level=self.level.copy(),
+            up_ids=self.up_ids, up_w=self.up_w,
+            core_src=self.core_src.copy(), core_dst=self.core_dst.copy(),
+            core_w=self.core_w.copy(), core_via=self.core_via.copy(),
+            core_ids=self.core_ids.copy())
+        shard_of = self.shard_of.copy()
+        touched: set = set()
+        inserted = []
+        for op in ops:
+            u = int(op.u)
+            if op.kind == "insert":
+                apply_insert_host(st, ids_h, d_h, pred_h, u,
+                                  [int(v) for v in op.nbrs],
+                                  [float(x) for x in op.ws], touched)
+                shard_of[u] = REPLICATED        # u joined the core
+                inserted.append(u)
+            elif op.kind == "delete":
+                apply_delete_host(st, ids_h, d_h, pred_h, u, touched)
+            else:
+                raise ValueError(f"unknown mutation kind {op.kind!r}")
+        rows = np.asarray(sorted(touched), np.int64)
+
+        blk_ids = np.asarray(self.lbl_ids).copy()
+        blk_d = np.asarray(self.lbl_d).copy()
+        blk_pred = self.lbl_pred.copy()
+        entries = self.entries_per_shard.copy()
+        cap = blk_ids.shape[2]
+        touched_shards: set = set()
+        for r in rows:
+            valid = ids_h[r] < self.n
+            owner = shard_of[np.minimum(ids_h[r], self.n)]
+            for p in range(self.num_shards):
+                # boolean-mask compaction keeps source order — the same
+                # stable layout partition_labels produces
+                keep = valid & ((owner == p) | (owner == REPLICATED))
+                cnt = int(keep.sum())
+                if cnt > cap:
+                    raise RuntimeError(
+                        f"shard {p} row {r}: {cnt} entries exceed the "
+                        f"block cap {cap}; repartition the index")
+                new_ids = np.full(cap, self.n, np.int32)
+                new_d = np.full(cap, np.inf, np.float32)
+                new_pred = np.full(cap, -1, np.int32)
+                new_ids[:cnt] = ids_h[r][keep]
+                new_d[:cnt] = d_h[r][keep]
+                new_pred[:cnt] = pred_h[r][keep]
+                if not (np.array_equal(blk_ids[p, r], new_ids)
+                        and np.array_equal(blk_d[p, r], new_d)):
+                    if r < self.n:
+                        entries[p] += cnt - int(
+                            (blk_ids[p, r] < self.n).sum())
+                    blk_ids[p, r] = new_ids
+                    blk_d[p, r] = new_d
+                    blk_pred[p, r] = new_pred
+                    touched_shards.add(p)
+        core_ids = np.flatnonzero(st.level == self.k).astype(np.int32)
+        core_pos = np.full(self.n + 1, len(core_ids), np.int32)
+        core_pos[core_ids] = np.arange(len(core_ids), dtype=np.int32)
+        stats = dataclasses.replace(
+            self.stats, n_core=len(core_ids), m_core=len(st.core_src),
+            label_entries=int((ids_h[:self.n] < self.n).sum()))
+        new = ShardedIndex._assemble(
+            n=self.n, k=self.k, cfg=self.cfg, level=st.level,
+            shard_of=shard_of,
+            blocks=LabelBlocks(ids=blk_ids, d=blk_d, pred=blk_pred,
+                               entries=entries),
+            core_ids=core_ids, core_pos=core_pos, core_src=st.core_src,
+            core_dst=st.core_dst, core_w=st.core_w, stats=stats,
+            strategy=self.strategy, replicate_top=self.replicate_top,
+            mesh=self.mesh, core_via=st.core_via, up_ids=self.up_ids,
+            up_w=self.up_w, up_via=self.up_via)
+        info = {"touched_rows": rows,
+                "touched_shards": sorted(touched_shards),
+                "inserted": inserted}
+        return new, info
+
     # ---------------------------------------------------------------- io
     def save(self, path) -> None:
         p = Path(path)

@@ -1,0 +1,171 @@
+"""Tier-1 tests for ``repro.fault``: straggler detection (EMA verdicts,
+flag streaks, eviction, fleet median view) and the fault-tolerant
+runner (injected-fault retries with rollback, retry accounting, NaN
+rollback that skips the bad data window, bounded-retry failure).
+
+Faults are injected deterministically — a scripted timing sequence or
+a step-indexed failure plan — so every assertion here is exact.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.fault import (FaultTolerantRunner, HostTimingAggregator,
+                         RunnerConfig, StragglerMonitor)
+
+
+# ----------------------------------------------------------- monitor
+def test_monitor_first_step_seeds_ema_without_verdict():
+    mon = StragglerMonitor()
+    v = mon.record(0.25)
+    assert mon.ema == 0.25
+    assert v == {"straggler": False, "evict": False, "ratio": 1.0}
+
+
+def test_monitor_flags_streak_then_evicts():
+    mon = StragglerMonitor(alpha=0.2, threshold=1.5, evict_after=3)
+    mon.record(1.0)                       # seed EMA
+    verdicts = [mon.record(2.0) for _ in range(3)]
+    assert [v["straggler"] for v in verdicts] == [True, True, True]
+    assert [v["evict"] for v in verdicts] == [False, False, True]
+    # straggler steps never fold into the EMA, so the ratio is stable
+    assert mon.ema == 1.0
+    assert all(v["ratio"] == 2.0 for v in verdicts)
+
+
+def test_monitor_flag_streak_resets_on_recovery():
+    mon = StragglerMonitor(alpha=0.5, threshold=1.5, evict_after=3)
+    mon.record(1.0)
+    mon.record(2.0), mon.record(2.0)      # two flags
+    assert mon.flags == 2
+    v = mon.record(1.0)                   # recovery step
+    assert not v["straggler"] and mon.flags == 0
+    assert mon.ema == pytest.approx(1.0)  # 0.5*1.0 + 0.5*1.0
+    # the streak starts over: two more slow steps still don't evict
+    assert not mon.record(2.0)["evict"] and not mon.record(2.0)["evict"]
+    assert mon.record(2.0)["evict"]
+
+
+def test_monitor_ema_update_is_exact_and_history_complete():
+    mon = StragglerMonitor(alpha=0.25, threshold=10.0)
+    times = [1.0, 2.0, 1.0, 4.0]
+    for s in times:
+        mon.record(s)
+    ema = 1.0
+    for s in times[1:]:
+        ema = 0.75 * ema + 0.25 * s
+    assert mon.ema == pytest.approx(ema)
+    assert [h[0] for h in mon.history] == times
+
+
+def test_monitor_scripted_timings_are_deterministic():
+    script = [1.0, 1.1, 3.0, 0.9, 3.0, 3.0, 1.0]
+    runs = []
+    for _ in range(2):
+        mon = StragglerMonitor(evict_after=2)
+        runs.append([mon.record(s) for s in script])
+    assert runs[0] == runs[1]
+
+
+def test_aggregator_flags_host_above_fleet_median():
+    agg = HostTimingAggregator(threshold=1.3)
+    for _ in range(4):
+        for h, s in [("h0", 1.0), ("h1", 1.0), ("h2", 1.0), ("h3", 2.0)]:
+            agg.record(h, s)
+    assert agg.stragglers() == ["h3"]
+
+
+def test_aggregator_empty_and_uniform_fleets():
+    agg = HostTimingAggregator()
+    assert agg.stragglers() == []
+    for h in ("a", "b"):
+        agg.record(h, 1.0)
+    assert agg.stragglers() == []
+
+
+# ------------------------------------------------------------ runner
+def _mk_runner(tmp_path, fail_plan=None, nan_steps=(), **cfg_kw):
+    """A tiny deterministic training loop: state = {'x': sum of batch
+    values consumed so far}. fail_plan maps step -> number of times
+    that step raises before succeeding."""
+    fail_plan = dict(fail_plan or {})
+    nan_steps = set(nan_steps)
+    calls = {"n": 0}
+
+    def make_batch(step):
+        return float(step + 1)
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        step = int(batch) - 1
+        if fail_plan.get(step, 0) > 0:
+            fail_plan[step] -= 1
+            raise RuntimeError(f"injected fault @ step {step}")
+        loss = np.nan if step in nan_steps else 1.0 / batch
+        return {"x": state["x"] + batch}, {"loss": np.float32(loss)}
+
+    cfg = RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                       handle_sigterm=False, **cfg_kw)
+    runner = FaultTolerantRunner(step_fn, {"x": np.float64(0.0)},
+                                 make_batch, cfg)
+    return runner, calls
+
+
+def test_runner_clean_run_accumulates_and_checkpoints(tmp_path):
+    runner, calls = _mk_runner(tmp_path)
+    state = runner.run(6)
+    assert float(state["x"]) == sum(range(1, 7))
+    assert calls["n"] == 6 and runner.events == []
+    # a fresh runner restores the final forced checkpoint
+    fresh, _ = _mk_runner(tmp_path)
+    assert fresh.restore() == 6
+    assert float(fresh.state["x"]) == sum(range(1, 7))
+
+
+def test_runner_retries_injected_fault_with_rollback_accounting(tmp_path):
+    runner, calls = _mk_runner(tmp_path, fail_plan={3: 2}, max_retries=3)
+    state = runner.run(5)
+    assert float(state["x"]) == sum(range(1, 6))    # replay is exact
+    kinds = [k for _, k, _ in runner.events]
+    assert kinds == ["step_failure", "rollback", "step_failure", "rollback"]
+    # steps 0..2 ran once, step 3 ran 3x (2 faults + success), 4 once;
+    # rollback restored step 2's checkpoint so step 2 replayed twice
+    assert calls["n"] == 5 + 2 + 2
+
+
+def test_runner_raises_after_max_retries(tmp_path):
+    runner, _ = _mk_runner(tmp_path, fail_plan={2: 99}, max_retries=2)
+    with pytest.raises(RuntimeError, match="injected fault @ step 2"):
+        runner.run(4)
+    failures = [e for e in runner.events if e[1] == "step_failure"]
+    assert len(failures) == 3                       # initial + 2 retries
+    assert all(e[0] == 2 for e in failures)
+
+
+def test_runner_nan_loss_rolls_back_and_skips_window(tmp_path):
+    runner, _ = _mk_runner(tmp_path, nan_steps={3})
+    state = runner.run(6)
+    kinds = [k for _, k, _ in runner.events]
+    assert kinds == ["nan_loss", "rollback"]
+    # rollback restores the step-2 checkpoint (x = 1+2) and skip_past
+    # jumps straight to step 4: both the bad window (batch 4.0) and the
+    # committed-but-uncheckpointed window (batch 3.0) are dropped
+    assert float(state["x"]) == sum(range(1, 7)) - 4.0 - 3.0
+    assert runner.step == 6
+
+
+def test_runner_nan_tolerance_allows_transient_spike(tmp_path):
+    runner, _ = _mk_runner(tmp_path, nan_steps={3}, nan_tolerance=1)
+    runner.run(6)
+    kinds = [k for _, k, _ in runner.events]
+    assert kinds == ["nan_loss"]                    # tolerated: no rollback
+    assert runner.step == 6
+
+
+def test_runner_straggler_monitor_sees_every_committed_step(tmp_path):
+    runner, _ = _mk_runner(tmp_path, fail_plan={3: 1})
+    runner.run(4)
+    # only committed steps reach the monitor (failed attempts don't);
+    # the rollback to step 2's checkpoint replays step 2 once
+    assert len(runner.monitor.history) == 4 + 1

@@ -1,0 +1,304 @@
+"""Differential exactness harness for §8.3 live mutation
+(docs/MUTATION.md): randomized interleaved insert/delete/query
+sequences through the versioned copy-on-write lane, each epoch checked
+**bitwise** against an ``ISLabelIndex.build`` from scratch over the
+mutated edge set — distances on both kernel backends, reconstructed
+paths (valid in the mutated graph, weight-sum == distance), and the
+sharded lane at shard counts {1, 4} (P=4 under forced host devices,
+per the dry-run isolation rule).
+
+The deterministic sweep replays >= 200 mutation steps per config;
+hypothesis (optional, requirements-dev) layers randomized short
+sequences on top via the same generator.
+
+Weights are integer-valued float32 so path sums are exact and bitwise
+equality is a fair demand.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import ISLabelIndex, IndexConfig
+from repro.graphs import generators as gen
+from repro.serve import MutationOp, VersionManager
+
+N_BASE, SPARES = 140, 16
+N = N_BASE + SPARES
+CFG = IndexConfig(l_cap=256, label_chunk=128)
+EPOCHS, OPS_PER_EPOCH, Q = 8, 25, 96
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _base_graph():
+    return gen.er_graph(N_BASE, 2.4, seed=5)
+
+
+def _op_schedule(rng, core_ids, spares, epochs, ops_per_epoch):
+    """Interleaved strict-domain §8.3 ops: inserts attach only to the
+    initial core + currently-live inserted spares; deletes target only
+    live inserted spares (the rebuild-exact domain)."""
+    pool, live = list(spares), []
+    core_ids = [int(c) for c in core_ids]
+    sched = []
+    for _ in range(epochs):
+        ops = []
+        for _ in range(ops_per_epoch):
+            if pool and (not live or rng.random() < 0.55):
+                u = pool.pop(int(rng.integers(len(pool))))
+                cands = core_ids + live
+                deg = int(rng.integers(1, min(3, len(cands)) + 1))
+                picks = rng.choice(len(cands), size=deg, replace=False)
+                ops.append(MutationOp(
+                    "insert", u, tuple(cands[j] for j in picks),
+                    tuple(float(x) for x in rng.integers(1, 9, deg))))
+                live.append(u)
+            else:
+                u = live.pop(int(rng.integers(len(live))))
+                ops.append(MutationOp("delete", u))
+                pool.append(u)
+        sched.append(ops)
+    return sched
+
+
+def _mirror_edges(src, dst, w, flat_ops):
+    """Host mirror of the mutated undirected edge set."""
+    es = [int(x) for x in src] + [int(x) for x in dst]
+    ed = [int(x) for x in dst] + [int(x) for x in src]
+    ew = [float(x) for x in w] * 2
+    for op in flat_ops:
+        if op.kind == "insert":
+            for v, wt in zip(op.nbrs, op.ws):
+                es += [op.u, int(v)]
+                ed += [int(v), op.u]
+                ew += [float(wt), float(wt)]
+        else:
+            keep = [i for i in range(len(es))
+                    if es[i] != op.u and ed[i] != op.u]
+            es = [es[i] for i in keep]
+            ed = [ed[i] for i in keep]
+            ew = [ew[i] for i in keep]
+    return (np.asarray(es, np.int32), np.asarray(ed, np.int32),
+            np.asarray(ew, np.float32))
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    """Run the full deterministic sweep once: apply each epoch through
+    the version manager AND rebuild from scratch, recording everything
+    the per-backend / path / sharded assertions need."""
+    nb, src, dst, w = _base_graph()
+    idx = ISLabelIndex.build(N, src, dst, w, CFG)
+    mgr = VersionManager.from_index(idx)
+    rng = np.random.default_rng(11)
+    sched = _op_schedule(rng, idx.core_ids, range(N_BASE, N),
+                         EPOCHS, OPS_PER_EPOCH)
+    assert sum(len(ops) for ops in sched) >= 200
+
+    records, flat, live = [], [], set()
+    for ops in sched:
+        version = mgr.apply(ops)
+        flat += list(ops)
+        for op in ops:
+            (live.add if op.kind == "insert" else live.discard)(op.u)
+        es, ed, ew = _mirror_edges(src, dst, w, flat)
+        scratch = ISLabelIndex.build(N, es, ed, ew, CFG)
+        ids = np.concatenate([np.arange(N_BASE),
+                              np.asarray(sorted(live))]).astype(np.int32)
+        qs = ids[rng.integers(0, len(ids), Q)]
+        qt = ids[rng.integers(0, len(ids), Q)]
+        want = np.asarray(scratch.engine.query(qs, qt), np.float32)
+        records.append({"ops": ops, "version": version, "qs": qs,
+                        "qt": qt, "want": want, "scratch": scratch,
+                        "edges": (es, ed, ew), "live": sorted(live)})
+    return {"idx": idx, "mgr": mgr, "graph": (src, dst, w),
+            "sched": sched, "records": records}
+
+
+# ------------------------------------------------- distances, per backend
+@pytest.mark.parametrize("backend", ["reference", "interpret"])
+def test_versioned_distances_bitwise_vs_scratch(sweep, backend):
+    fn = sweep["mgr"].family.full_fn(backend)
+    for i, rec in enumerate(sweep["records"]):
+        ans, _ = fn(rec["version"].state, rec["qs"], rec["qt"])
+        ans = np.asarray(ans, np.float32)
+        assert np.array_equal(ans, rec["want"]), \
+            f"epoch {i} ({backend}): versioned != scratch rebuild"
+
+
+def test_host_oracle_matches_scratch(sweep):
+    """The mutated host index (the audit oracle) agrees bitwise too."""
+    for i, rec in enumerate(sweep["records"]):
+        got = np.asarray(rec["version"].index.query(rec["qs"], rec["qt"]),
+                         np.float32)
+        assert np.array_equal(got, rec["want"]), f"epoch {i}: host oracle"
+
+
+# ------------------------------------------------------------------ paths
+def _edge_weight_map(es, ed, ew):
+    m: dict = {}
+    for a, b, x in zip(es.tolist(), ed.tolist(), ew.tolist()):
+        key = (a, b)
+        if key not in m or x < m[key]:
+            m[key] = x
+    return m
+
+
+def _check_paths(engine, qs, qt, want, emap, tag):
+    dist, paths, ok = engine.paths(qs, qt)
+    dist = np.asarray(dist, np.float32)
+    assert np.array_equal(dist, want), f"{tag}: path-lane distances"
+    assert np.asarray(ok).all(), f"{tag}: reconstruction overflowed hop_cap"
+    for j in range(len(qs)):
+        p = paths[j]
+        if not np.isfinite(want[j]):
+            assert p == [], f"{tag}: unreachable pair got a path"
+            continue
+        assert p[0] == qs[j] and p[-1] == qt[j], f"{tag}: endpoints"
+        total = np.float32(0.0)
+        for a, b in zip(p, p[1:]):
+            assert (a, b) in emap, f"{tag}: edge ({a},{b}) not in graph"
+            total = np.float32(total + np.float32(emap[(a, b)]))
+        assert total == want[j], f"{tag}: weight sum != distance"
+
+
+@pytest.mark.parametrize("epoch", [0, EPOCHS // 2, EPOCHS - 1])
+def test_paths_valid_and_equal_vs_scratch(sweep, epoch):
+    from repro.paths import PathEngine
+    rec = sweep["records"][epoch]
+    qs, qt = rec["qs"][:20], rec["qt"][:20]
+    want = rec["want"][:20]
+    emap = _edge_weight_map(*rec["edges"])
+    _check_paths(PathEngine.from_index(rec["version"].index), qs, qt,
+                 want, emap, f"epoch {epoch} mutated")
+    _check_paths(PathEngine.from_index(rec["scratch"]), qs, qt,
+                 want, emap, f"epoch {epoch} scratch")
+
+
+# ---------------------------------------------------------------- sharded
+def test_sharded_p1_matches_scratch(sweep):
+    from repro.shard import ShardedIndex
+    sidx = ShardedIndex.from_index(sweep["idx"], 1)
+    for i, rec in enumerate(sweep["records"]):
+        sidx, info = sidx.apply_mutations(rec["ops"])
+        got = np.asarray(sidx.query(rec["qs"], rec["qt"]), np.float32)
+        assert np.array_equal(got, rec["want"]), f"epoch {i}: sharded P=1"
+    assert sorted(info) == ["inserted", "touched_rows", "touched_shards"]
+
+
+def test_sharded_p4_matches_scratch(sweep, tmp_path):
+    """Same sweep at P=4 in a subprocess with 4 forced host devices."""
+    np.savez(tmp_path / "q.npz",
+             qs=np.stack([r["qs"] for r in sweep["records"]]),
+             qt=np.stack([r["qt"] for r in sweep["records"]]),
+             want=np.stack([r["want"] for r in sweep["records"]]))
+    (tmp_path / "sched.json").write_text(json.dumps(
+        [[[op.kind, int(op.u), [int(v) for v in op.nbrs],
+           [float(x) for x in op.ws]] for op in ops]
+         for ops in sweep["sched"]]))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    code = textwrap.dedent(f"""
+        import json
+        import numpy as np
+        from repro.core import ISLabelIndex, IndexConfig
+        from repro.graphs import generators as gen
+        from repro.serve import MutationOp
+        from repro.shard import ShardedIndex
+
+        nb, src, dst, w = gen.er_graph({N_BASE}, 2.4, seed=5)
+        idx = ISLabelIndex.build({N}, src, dst, w,
+                                 IndexConfig(l_cap=256, label_chunk=128))
+        sidx = ShardedIndex.from_index(idx, 4)
+        data = np.load({str(tmp_path / 'q.npz')!r})
+        sched = json.loads(open({str(tmp_path / 'sched.json')!r}).read())
+        for i, ops in enumerate(sched):
+            ops = [MutationOp(k, u, tuple(nb_), tuple(ws))
+                   for k, u, nb_, ws in ops]
+            sidx, _ = sidx.apply_mutations(ops)
+            got = np.asarray(sidx.query(data['qs'][i], data['qt'][i]),
+                             np.float32)
+            assert np.array_equal(got, data['want'][i]), f"epoch {{i}}"
+        print("P4-OK", len(sched))
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert f"P4-OK {EPOCHS}" in r.stdout
+
+
+# ------------------------------------------------------- strict domain
+def test_strict_mode_rejects_out_of_domain_ops(sweep):
+    mgr = sweep["mgr"]
+    leaf = int(np.flatnonzero(
+        np.asarray(sweep["idx"].level[:N_BASE]) < sweep["idx"].k)[0])
+    with pytest.raises(ValueError, match="non-core"):
+        mgr.apply([MutationOp("insert", N_BASE, (leaf,), (1.0,))])
+    with pytest.raises(ValueError, match="build-time"):
+        mgr.apply([MutationOp("delete", leaf)])
+    # failed batches leave the manager untouched
+    assert mgr.current is sweep["records"][-1]["version"]
+
+
+def test_delete_then_reinsert_restores_bitwise(sweep):
+    """Id reuse: delete a live spare whose (last) insertion attached
+    only to the initial core, then replay that exact insertion — every
+    answer returns to the pre-delete version's, bitwise. (Spares whose
+    attachments were themselves deleted later can't round-trip this
+    way: those edges are legitimately gone from the final state.)"""
+    mgr = sweep["mgr"]
+    rec = sweep["records"][-1]
+    ins = {op.u: op for ops in sweep["sched"] for op in ops
+           if op.kind == "insert"}           # last insertion per id
+    core = {int(c) for c in sweep["idx"].core_ids}
+    cands = [u for u in rec["live"]
+             if all(int(v) in core for v in ins[u].nbrs)]
+    if not cands:
+        pytest.skip("no purely core-attached live spare in this schedule")
+    u = cands[0]
+    v_del = mgr.apply([MutationOp("delete", u)])
+    v_re = mgr.apply([ins[u]])
+    fn = mgr.family.full_fn("reference")
+    before, _ = fn(rec["version"].state, rec["qs"], rec["qt"])
+    after, _ = fn(v_re.state, rec["qs"], rec["qt"])
+    assert np.array_equal(np.asarray(before), np.asarray(after))
+    assert v_del.vid < v_re.vid == mgr.current.vid
+
+
+# ------------------------------------------------- hypothesis (optional)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_ops=st.integers(5, 30))
+    def test_random_sequences_bitwise_vs_scratch(sweep, seed, n_ops):
+        idx = sweep["idx"]
+        src, dst, w = sweep["graph"]
+        rng = np.random.default_rng(seed)
+        [ops] = _op_schedule(rng, idx.core_ids, range(N_BASE, N), 1, n_ops)
+        mgr = VersionManager.from_index(idx)
+        version = mgr.apply(ops)
+        es, ed, ew = _mirror_edges(src, dst, w, ops)
+        scratch = ISLabelIndex.build(N, es, ed, ew, CFG)
+        live = sorted({op.u for op in ops if op.kind == "insert"}
+                      - {op.u for op in ops if op.kind == "delete"})
+        ids = np.concatenate([np.arange(N_BASE),
+                              np.asarray(live, np.int64)]).astype(np.int32)
+        qs = ids[rng.integers(0, len(ids), 64)]
+        qt = ids[rng.integers(0, len(ids), 64)]
+        want = np.asarray(scratch.engine.query(qs, qt), np.float32)
+        ans, _ = mgr.family.full_fn("reference")(version.state, qs, qt)
+        assert np.array_equal(np.asarray(ans, np.float32), want)
+        mgr.retire(version)

@@ -58,9 +58,18 @@ def test_oracle_valid_after_delete():
     idx = ISLabelIndex.build(n, src, dst, w,
                              IndexConfig(l_cap=256, label_chunk=64))
     d0, p0 = idx.shortest_path(0, 63)           # warm the caches
+    labels0 = idx._label_host()
     u = 27
-    idx.delete_vertex(u)
-    assert idx._host_labels is None and idx._core_adj is None
+    touched = idx.delete_vertex(u)
+    # the stale host-label cache is replaced by the fresh mutated
+    # copies (never served stale) and the core adjacency is dropped
+    assert idx._core_adj is None
+    assert idx._label_host()[0] is not labels0[0]
+    assert (idx._label_host()[0] == np.asarray(idx.lbl_ids)).all()
+    # the mutator reports exactly the rows it rewrote
+    assert u in touched.tolist()
+    diff = np.nonzero((labels0[0] != idx._label_host()[0]).any(axis=1))[0]
+    assert set(diff.tolist()) <= set(touched.tolist())
     d1, p1 = idx.shortest_path(0, 63)
     assert np.isfinite(d1) and u not in p1
     ed = {}

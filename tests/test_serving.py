@@ -302,3 +302,125 @@ def test_classify_accepts_scalars_and_device_arrays(index):
     one = eng.classify(0, 2, index.level, index.k)
     assert one.shape == (1,) and one[0] == host[0]
     assert set(np.unique(host)) <= {1, 2, 3}
+
+
+# --------------------------------------- versioned mutation lane (§8.3)
+@pytest.fixture(scope="module")
+def vindex():
+    """Base graph plus 8 preallocated spare ids for live inserts."""
+    n, src, dst, w = gen.er_graph(180, 2.4, seed=4)
+    return ISLabelIndex.build(n + 8, src, dst, w,
+                              IndexConfig(l_cap=128, label_chunk=64))
+
+
+def _vserver(vindex, **kw):
+    kw.setdefault("buckets", (8, 32))
+    kw.setdefault("max_wait_ms", 1.0)
+    return DistanceServer(vindex, versioned=True, **kw)
+
+
+def _bridge(vindex, max_w=9.0):
+    """A spare u plus two core endpoints whose distance a unit-weight
+    bridge through u provably shortens (d > 2)."""
+    core = np.asarray(vindex.core_ids, np.int32)
+    u = vindex.n - 1                              # last spare, never core
+    aa, bb = np.meshgrid(core, core, indexing="ij")
+    d = np.asarray(vindex.query(aa.ravel(), bb.ravel()), np.float32)
+    j = np.flatnonzero((d > 2.0) & (d < max_w))
+    if not len(j):
+        raise RuntimeError("no bridgeable core pair in fixture graph")
+    return u, int(aa.ravel()[j[0]]), int(bb.ravel()[j[0]]), d[j[0]]
+
+
+def test_versioned_readwrite_serves_exact_with_zero_compiles(vindex):
+    srv = _vserver(vindex, cache_size=1024)
+    srv.warmup()
+    pre = srv.compile_cache_sizes()
+    nb = vindex.n - 8
+    tr = make_trace("readwrite", n=vindex.n, num_requests=400,
+                    rate_qps=5e4, seed=1, write_ratio=0.05, n_read=nb,
+                    spares=range(nb, vindex.n), attach_to=vindex.core_ids)
+    ans, vids = srv.serve_readwrite_trace(tr)
+    assert srv.compile_cache_sizes() == pre     # zero recompiles
+    reads = np.asarray([i for i in range(len(tr)) if tr.writes[i] is None])
+    writes = np.asarray([i for i in range(len(tr))
+                         if tr.writes[i] is not None])
+    assert np.isnan(ans[writes]).all() and not np.isnan(ans[reads]).any()
+    # reads answered on the final version match the mutated host oracle
+    seg = reads[vids[reads] == vids.max()]
+    want = np.asarray(srv.index.query(tr.s[seg], tr.t[seg]), np.float32)
+    assert np.array_equal(ans[seg].astype(np.float32), want)
+    snap = srv.stats()
+    assert snap["mutations"] == tr.meta["writes"]
+    assert snap["versions"]["current"] == tr.meta["writes"]
+    assert snap["versions"]["live"] == [tr.meta["writes"]]
+    srv.drain()
+
+
+def test_per_version_cache_isolation_no_stale_hits(vindex):
+    from repro.serve import MutationOp
+    srv = _vserver(vindex, cache_size=256)
+    u, a, b, d_old = _bridge(vindex)
+    r1 = srv.submit(a, b, now=0.0)
+    srv.pump(now=0.0, force=True)
+    assert srv.take_result(r1) == d_old
+    r2 = srv.submit(a, b, now=0.001)             # same version: cache hit
+    assert srv.take_result(r2) == d_old
+    assert srv.metrics.cache_hits == 1
+    srv.submit_mutation([MutationOp("insert", u, (a, b), (1.0, 1.0))],
+                        now=0.002)
+    assert len(srv.cache) == 0                   # swap clears the cache
+    r3 = srv.submit(a, b, now=0.003)
+    srv.pump(now=0.003, force=True)
+    got = srv.take_result(r3)
+    assert got == np.float32(2.0) and got != d_old   # not the stale value
+    assert srv.metrics.cache_hits == 1           # r3 was computed, not hit
+    srv.drain()
+
+
+def test_swap_atomicity_inflight_batch_completes_on_old_version(vindex):
+    from repro.serve import MutationOp
+    srv = _vserver(vindex, cache_size=0, max_wait_ms=1e6)
+    u, a, b, d_old = _bridge(vindex)
+    rid = srv.submit(a, b, now=0.0)              # queued, deadline far off
+    assert srv.take_result(rid) is None
+    v = srv.submit_mutation([MutationOp("insert", u, (a, b), (1.0, 1.0))],
+                            now=0.0)
+    # the swap force-flushed the in-flight read on its submit-time
+    # version: it sees the pre-mutation distance
+    assert srv.take_result(rid) == d_old
+    rid2 = srv.submit(a, b, now=0.1)
+    srv.pump(now=0.1, force=True)
+    assert srv.take_result(rid2) == np.float32(2.0)
+    assert srv.versions.current is v
+    srv.drain()
+
+
+def test_versioned_mode_guards(vindex):
+    srv = _vserver(vindex)
+    with pytest.raises(ValueError, match="submit_mutation"):
+        srv.refresh()
+    with pytest.raises(ValueError):
+        DistanceServer(vindex, versioned=True, path_hop_caps=(32,))
+    srv.drain()
+
+
+def test_registry_replacement_goes_through_drain(vindex):
+    """Regression: ``register`` on a taken name used to silently drop
+    the old server with its queued requests and pinned versions."""
+    from repro.serve import MutationOp
+    reg = IndexRegistry()
+    old = reg.register("g", vindex, buckets=(8,), max_wait_ms=1e6,
+                       warmup=False, versioned=True)
+    u, a, b, d_old = _bridge(vindex)
+    old.submit_mutation([MutationOp("insert", u, (a, b), (1.0, 1.0))],
+                        now=0.0)
+    rid = old.submit(a, b, now=0.0)              # left queued
+    new = reg.register("g", vindex, buckets=(8,), warmup=False,
+                       versioned=True)
+    assert reg.get("g") is new and new is not old and len(reg) == 1
+    # replacement drained the old holder: its queued read was answered
+    # (on the old server's mutated current version), versions released
+    assert old.take_result(rid) == np.float32(2.0)
+    assert old.versions.live_versions() == [old.versions.current.vid]
+    reg.unregister("g")
