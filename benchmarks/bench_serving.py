@@ -3,6 +3,12 @@
 in ``BENCH_serving.json`` (QPS, p50/p95/p99 latency, batch fill, cache
 hit rate, lane split per cell), alongside the usual CSV rows.
 
+Also measures observability overhead: one scenario is replayed twice,
+untraced vs. with a live ``Tracer``, and the qps_compute ratio is
+reported (``obs_overhead`` in the JSON doc) — the acceptance bound is
+<5% (docs/OBSERVABILITY.md; tracer calls sit outside the timed device
+windows, so the expected overhead is ~0).
+
   PYTHONPATH=src python -m benchmarks.bench_serving [--full]
 """
 from __future__ import annotations
@@ -13,6 +19,28 @@ from benchmarks import common
 
 
 SCENARIOS = ("uniform", "hotspot", "bursty", "repeated")
+
+
+def _obs_overhead(idx, n, n_req, rate) -> dict:
+    """qps_compute untraced vs. traced on the same trace/buckets."""
+    from repro.obs import Tracer
+    from repro.serve import DistanceServer, make_trace
+    trace = make_trace("uniform", n=n, num_requests=n_req, rate_qps=rate,
+                       seed=7)
+    qps = {}
+    for tag, tracer in (("plain", None), ("traced", Tracer())):
+        server = DistanceServer(idx, buckets=(64,), max_wait_ms=2.0,
+                                cache_size=65536, tracer=tracer)
+        server.serve_trace(trace)
+        qps[tag] = server.stats()["qps_compute"]
+    ratio = qps["plain"] / qps["traced"] if qps["traced"] else 0.0
+    overhead = max(0.0, ratio - 1.0)
+    common.row("serving", "obs-overhead", 0.0,
+               qps_plain=round(qps["plain"]),
+               qps_traced=round(qps["traced"]),
+               overhead_pct=round(overhead * 100, 2))
+    return {"qps_plain": qps["plain"], "qps_traced": qps["traced"],
+            "overhead_frac": overhead}
 
 
 def _bucket_sets(full: bool):
@@ -67,6 +95,7 @@ def main(full: bool = False) -> None:
                 "lanes": snap["lanes"],
                 "warmup_seconds": snap["warmup_seconds"],
             })
+    overhead = _obs_overhead(idx, n, n_req, rate)
     common.write_json("serving", {
         "graph": {"kind": "rmat14" if full else "er10", "n": int(n),
                   "m": int(len(src))},
@@ -74,6 +103,7 @@ def main(full: bool = False) -> None:
                   "label_entries": int(idx.stats.label_entries)},
         "full": full,
         "results": results,
+        "obs_overhead": overhead,
     })
 
 

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Bench-trajectory regression gate (docs/OBSERVABILITY.md).
+
+Diffs fresh ``BENCH_*.json`` documents against the committed baseline
+at the repo root and exits nonzero when any metric regressed beyond
+tolerance — the CI ``bench-regression`` step:
+
+  python scripts/obs_report.py --fresh bench-out \
+      --timing-tolerance 1.5 --behavior-tolerance 0.05
+
+Timing metrics (us_per_call rows, qps_compute, p99 latency) are
+machine-dependent — CI passes a loose tolerance. Behavior metrics
+(cache_hit_rate, batch_fill_ratio, per-lane request counts) are
+deterministic given the same trace/preset, so the tight default
+tolerance applies: drift there is a serving-logic regression.
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.obs.regression import compare_dirs, format_report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=".",
+                    help="directory with the committed BENCH_*.json "
+                         "(default: repo root)")
+    ap.add_argument("--fresh", required=True,
+                    help="directory with the freshly generated "
+                         "BENCH_*.json")
+    ap.add_argument("--tables", default="",
+                    help="comma-separated table names to REQUIRE (e.g. "
+                         "serving,query); a required table missing from "
+                         "the fresh run fails the gate. Empty: compare "
+                         "whatever overlaps")
+    ap.add_argument("--timing-tolerance", type=float, default=0.5,
+                    help="relative tolerance for timing metrics")
+    ap.add_argument("--behavior-tolerance", type=float, default=0.05,
+                    help="relative tolerance for deterministic behavior "
+                         "metrics")
+    args = ap.parse_args()
+    tables = [t for t in args.tables.split(",") if t] or None
+    regs, compared, skipped = compare_dirs(
+        args.baseline, args.fresh, tables=tables,
+        timing_tolerance=args.timing_tolerance,
+        behavior_tolerance=args.behavior_tolerance)
+    print(format_report(regs, compared, skipped,
+                        timing_tolerance=args.timing_tolerance,
+                        behavior_tolerance=args.behavior_tolerance))
+    if not compared and not regs:
+        print("WARNING: no tables compared (no overlapping BENCH_*.json)")
+    return 1 if regs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

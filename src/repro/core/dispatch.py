@@ -45,8 +45,12 @@ from repro.kernels.spmv_relax.ops import coo_to_ell
 def label_intersect_dispatch(ids_s, d_s, ids_t, d_t, n_sentinel: int,
                              backend: str):
     """Equation 1 μ via the resolved kernel backend. Returns float32[Q]."""
-    return li_ops.label_intersect(ids_s, d_s, ids_t, d_t, n_sentinel,
-                                  backend=backend)
+    # named_scope threads through to XLA HLO metadata, so profiler
+    # traces (jax.profiler / --profile-dir) attribute device time to
+    # the paper's stages (docs/OBSERVABILITY.md)
+    with jax.named_scope("islabel.label_intersect"):
+        return li_ops.label_intersect(ids_s, d_s, ids_t, d_t, n_sentinel,
+                                      backend=backend)
 
 
 @partial(jax.jit, static_argnames=("n_core", "max_rounds"))
@@ -72,11 +76,13 @@ def core_relax(seed_s, seed_t, ce_src, ce_dst, ce_w, mu,
         _, _, it, improved = state
         return improved & (it < max_rounds)
 
-    ds, dt, rounds, _ = jax.lax.while_loop(
-        cond, body, (seed_s, seed_t, jnp.int32(0), jnp.bool_(True)))
-    # the sentinel column n_core parks non-core label entries — exclude it
-    through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
-    return jnp.minimum(mu, through_core), ds, dt, rounds
+    with jax.named_scope("islabel.core_relax"):
+        ds, dt, rounds, _ = jax.lax.while_loop(
+            cond, body, (seed_s, seed_t, jnp.int32(0), jnp.bool_(True)))
+        # the sentinel column n_core parks non-core label entries —
+        # exclude it
+        through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
+        return jnp.minimum(mu, through_core), ds, dt, rounds
 
 
 @partial(jax.jit,
@@ -102,12 +108,13 @@ def _core_relax_ell(seed_s, seed_t, nbr_ids, nbr_w, mu, n_core: int,
         _, it, improved = state
         return improved & (it < max_rounds)
 
-    d, rounds, _ = jax.lax.while_loop(
-        cond, body, (d0, jnp.int32(0), jnp.bool_(True)))
-    ds = d[:q, :v]
-    dt = d[q:rows, :v]
-    through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
-    return jnp.minimum(mu, through_core), ds, dt, rounds
+    with jax.named_scope("islabel.core_relax_ell"):
+        d, rounds, _ = jax.lax.while_loop(
+            cond, body, (d0, jnp.int32(0), jnp.bool_(True)))
+        ds = d[:q, :v]
+        dt = d[q:rows, :v]
+        through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
+        return jnp.minimum(mu, through_core), ds, dt, rounds
 
 
 class CoreRelaxer:

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.fault.stragglers import StragglerMonitor
+from repro.obs.registry import REGISTRY
 
 
 @dataclasses.dataclass
@@ -54,6 +55,13 @@ class FaultTolerantRunner:
         self.monitor = StragglerMonitor()
         self.step = 0
         self.events: list[tuple] = []    # (step, kind, info) audit log
+        # every audit event also counts into the process registry
+        # (fault.events{kind=...}), so the serving stack's stats()
+        # surfaces training-side fault state (docs/OBSERVABILITY.md)
+        self._event_counter = REGISTRY.counter(
+            "fault.events", "fault-tolerance audit events by kind")
+        self._steps_counter = REGISTRY.counter(
+            "fault.steps", "training steps completed")
         self._preempted = False
         if cfg.handle_sigterm:
             try:
@@ -64,12 +72,16 @@ class FaultTolerantRunner:
     def _on_sigterm(self, *_):
         self._preempted = True
 
+    def _event(self, step: int, kind: str, info=None) -> None:
+        self.events.append((step, kind, info))
+        self._event_counter.inc(1, kind=kind)
+
     def restore(self):
         state, step = self.ckpt.restore_latest(self.state,
                                                shardings=self.shardings)
         if state is not None:
             self.state, self.step = state, step
-            self.events.append((step, "restored", None))
+            self._event(step, "restored")
         return self.step
 
     def run(self, n_steps: int, on_metrics: Callable | None = None):
@@ -79,7 +91,7 @@ class FaultTolerantRunner:
             if self._preempted:
                 self.ckpt.maybe_save(self.step, self.state, force=True)
                 self.ckpt.wait()
-                self.events.append((self.step, "preempted", None))
+                self._event(self.step, "preempted")
                 return self.state
             t0 = time.perf_counter()
             try:
@@ -88,7 +100,7 @@ class FaultTolerantRunner:
                 loss = float(np.asarray(jax.device_get(metrics["loss"])))
                 if not np.isfinite(loss):
                     bad_streak += 1
-                    self.events.append((self.step, "nan_loss", loss))
+                    self._event(self.step, "nan_loss", loss)
                     if bad_streak > self.cfg.nan_tolerance:
                         self._rollback(skip_past=self.step + 1)
                         bad_streak = 0
@@ -98,6 +110,7 @@ class FaultTolerantRunner:
                 self.state = new_state
                 self.step += 1
                 retries = 0
+                self._steps_counter.inc(1)
                 self.monitor.record(time.perf_counter() - t0)
                 self.ckpt.maybe_save(self.step, self.state)
                 if on_metrics:
@@ -106,7 +119,7 @@ class FaultTolerantRunner:
                 raise
             except Exception as e:     # device failure / injected fault
                 retries += 1
-                self.events.append((self.step, "step_failure", repr(e)))
+                self._event(self.step, "step_failure", repr(e))
                 if retries > self.cfg.max_retries:
                     self.ckpt.wait()
                     raise
@@ -123,4 +136,4 @@ class FaultTolerantRunner:
             self.step = max(step, skip_past or 0)
         elif skip_past is not None:
             self.step = skip_past        # no checkpoint yet: just skip data
-        self.events.append((self.step, "rollback", None))
+        self._event(self.step, "rollback")

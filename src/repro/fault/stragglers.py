@@ -10,10 +10,17 @@ restart path (checkpoint + re-mesh) then removes the host.
 
 Single-process builds exercise the same logic with simulated timings
 (tests/test_fault.py).
+
+Both classes report into the process metric registry
+(``repro.obs.REGISTRY``, ``fault.*`` series), which the serving stack
+surfaces through ``DistanceServer.stats()["fault"]`` — one place to
+read training-side straggler state next to the serving metrics.
 """
 from __future__ import annotations
 
 import dataclasses
+
+from repro.obs.registry import REGISTRY
 
 
 @dataclasses.dataclass
@@ -24,6 +31,7 @@ class StragglerMonitor:
     ema: float | None = None
     flags: int = 0
     history: list = dataclasses.field(default_factory=list)
+    host: str = "local"             # registry series label
 
     def record(self, step_seconds: float) -> dict:
         verdict = {"straggler": False, "evict": False,
@@ -44,6 +52,16 @@ class StragglerMonitor:
                 self.ema = (1 - self.alpha) * self.ema \
                     + self.alpha * step_seconds
         self.history.append((step_seconds, dict(verdict)))
+        if verdict["straggler"]:
+            REGISTRY.counter("fault.straggler_flags",
+                             "steps flagged above the EMA threshold").inc(
+                1, host=self.host)
+        g = REGISTRY.gauge
+        g("fault.step_seconds_ema", "per-host step wall-time EMA").set(
+            self.ema, host=self.host)
+        g("fault.straggler_streak",
+          "consecutive flagged steps (evict at evict_after)").set(
+            self.flags, host=self.host)
         return verdict
 
 
@@ -55,7 +73,7 @@ class HostTimingAggregator:
     hosts: dict = dataclasses.field(default_factory=dict)
 
     def record(self, host: str, step_seconds: float):
-        mon = self.hosts.setdefault(host, StragglerMonitor())
+        mon = self.hosts.setdefault(host, StragglerMonitor(host=host))
         return mon.record(step_seconds)
 
     def stragglers(self):
@@ -64,4 +82,8 @@ class HostTimingAggregator:
         if not emas:
             return []
         med = float(np.median(list(emas.values())))
-        return [h for h, e in emas.items() if e > self.threshold * med]
+        out = [h for h, e in emas.items() if e > self.threshold * med]
+        REGISTRY.gauge("fault.fleet_stragglers",
+                       "hosts above threshold x fleet-median EMA").set(
+            len(out))
+        return out

@@ -61,6 +61,78 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class _ObsSession:
+    """Observability wiring shared by the serving modes
+    (docs/OBSERVABILITY.md): request tracing (``--trace-out``), the
+    compile-event watcher (always on — it is the exported form of the
+    zero-recompile guarantee), a JSON-lines event log (``--events-out``)
+    and the registry dump (``--metrics-out``). Construct *before* the
+    server so warmup compiles are attributed to the warmup region."""
+
+    def __init__(self, args, mode: str):
+        from repro.obs import CompileWatcher, EventLog, NULL_TRACER, Tracer
+        self.args = args
+        self.mode = mode
+        self.tracer = (Tracer(f"repro.serve[{mode}]") if args.trace_out
+                       else NULL_TRACER)
+        self.watcher = CompileWatcher().start()
+        self.log = EventLog(args.events_out or None)
+        self.log.log("start", mode=mode, graph=args.graph, n=args.n,
+                     queries=args.queries, scenario=args.scenario)
+
+    def profiled(self):
+        """``jax.profiler`` session over the replay (``--profile-dir``);
+        no-op without the flag."""
+        from repro.obs import profiler_session
+        return profiler_session(self.args.profile_dir or None)
+
+    def finish(self, server, require_zero_read_compiles: bool = False
+               ) -> int:
+        """Write every requested sink; returns audit failures (trace
+        coverage below 99%, or — in mutate mode — any XLA backend
+        compile counted on the read path after warmup)."""
+        from repro.obs import (device_memory_gauges, version_family_gauges,
+                               write_chrome_trace, write_metrics)
+        args = self.args
+        failures = 0
+        self.watcher.stop()
+        device_memory_gauges()
+        if server.versions is not None:
+            version_family_gauges(server.versions, server=server.name)
+        if self.watcher.supported:
+            by_region = self.watcher.snapshot()
+            print(f"  xla compiles by region: {by_region}")
+            reads = self.watcher.count("serve_read")
+            if require_zero_read_compiles:
+                if reads:
+                    print(f"  AUDIT FAIL: {reads} XLA backend compiles on "
+                          f"the read path after warmup")
+                    failures += 1
+                else:
+                    print("  audit[compile-events]: 0 backend compiles in "
+                          "region serve_read across the replay")
+        if self.tracer.enabled:
+            cov = self.tracer.request_coverage()
+            print(f"  trace: {len(self.tracer.finished())} spans; request "
+                  f"coverage min={cov['min']:.4f} mean={cov['mean']:.4f} "
+                  f"over {cov['requests']} request(s)")
+            p = write_chrome_trace(args.trace_out, self.tracer)
+            print(f"  trace written to {p} (chrome://tracing / "
+                  f"ui.perfetto.dev)")
+            if cov["requests"] and cov["min"] < 0.99:
+                print("  AUDIT FAIL: request spans cover <99% of measured "
+                      "request time")
+                failures += 1
+            self.log.log("trace_written", path=str(p), **cov)
+        if args.metrics_out:
+            p = write_metrics(args.metrics_out, mode=self.mode,
+                              server=server.name)
+            print(f"  metrics registry written to {p}")
+        self.log.log("finish", mode=self.mode, failures=failures)
+        self.log.close()
+        return failures
+
+
 def serve_lm(args):
     from repro.configs import registry
     from repro.launch.train import smoke_spec
@@ -129,6 +201,7 @@ def serve_distance(args, paths: bool = False) -> int:
     from repro.core import ISLabelIndex, IndexConfig, ref
     from repro.serve import IndexRegistry, make_trace
 
+    obs = _ObsSession(args, "path" if paths else "distance")
     if args.load:
         idx = ISLabelIndex.load(args.load)
         n = idx.n
@@ -160,19 +233,22 @@ def serve_distance(args, paths: bool = False) -> int:
         max_wait_ms=args.max_wait_ms, cache_size=args.cache,
         backend=args.backend or None,
         path_hop_caps=(tuple(int(h) for h in args.hop_caps.split(","))
-                       if paths else None))
+                       if paths else None),
+        tracer=obs.tracer)
     print(f"  warmed {server.compile_cache_sizes()} shapes "
           f"in {server.warmup_seconds:.1f}s")
 
     trace = make_trace(args.scenario, n=n, num_requests=args.queries,
                        rate_qps=args.rate, seed=args.seed)
     failures = 0
+    with obs.profiled():
+        if paths:
+            served, path_list, valid = server.serve_path_trace(trace)
+        else:
+            served = server.serve_trace(trace)
     if paths:
-        served, path_list, valid = server.serve_path_trace(trace)
         failures += _audit_paths(src, dst, w, trace, served, path_list,
                                  valid)
-    else:
-        served = server.serve_trace(trace)
     stats = server.stats()
     print(json.dumps(stats, indent=2, sort_keys=True))
 
@@ -205,6 +281,7 @@ def serve_distance(args, paths: bool = False) -> int:
     if stats["qps_compute"] <= 0:
         print("  AUDIT FAIL: zero QPS")
         failures += 1
+    failures += obs.finish(server)
     return failures
 
 
@@ -273,6 +350,7 @@ def serve_mutate(args) -> int:
     from repro.core import ISLabelIndex, IndexConfig
     from repro.serve import IndexRegistry, make_trace
 
+    obs = _ObsSession(args, "mutate")
     n_base, src, dst, w = _build_graph(args)
     n = n_base + args.spares
     print(f"[serve-mutate] graph {args.graph} n={n_base} "
@@ -288,7 +366,8 @@ def serve_mutate(args) -> int:
         args.index_name, idx,
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         max_wait_ms=args.max_wait_ms, cache_size=args.cache,
-        backend=args.backend or None, versioned=True)
+        backend=args.backend or None, versioned=True,
+        tracer=obs.tracer)
     print(f"  warmed {server.compile_cache_sizes()} shapes "
           f"in {server.warmup_seconds:.1f}s")
 
@@ -298,7 +377,8 @@ def serve_mutate(args) -> int:
                        spares=range(n_base, n), attach_to=idx.core_ids)
     print(f"  trace: {trace.meta}")
     shapes_before = server.compile_cache_sizes()
-    served, vids = server.serve_readwrite_trace(trace)
+    with obs.profiled():
+        served, vids = server.serve_readwrite_trace(trace)
     shapes_after = server.compile_cache_sizes()
     stats = server.stats()
     print(json.dumps(stats, indent=2, sort_keys=True))
@@ -317,6 +397,9 @@ def serve_mutate(args) -> int:
     if stats["qps_compute"] <= 0:
         print("  AUDIT FAIL: zero QPS")
         failures += 1
+    # compile events are the exported twin of the cache-size audit:
+    # the watcher must have counted zero serve_read region compiles
+    failures += obs.finish(server, require_zero_read_compiles=True)
     return failures
 
 
@@ -370,6 +453,18 @@ def main():
     ap.add_argument("--index-name", default="default")
     ap.add_argument("--save", default="")
     ap.add_argument("--load", default="")
+    # -- observability sinks (docs/OBSERVABILITY.md) -----------------------
+    ap.add_argument("--trace-out", default="",
+                    help="write request-lifecycle spans as Chrome "
+                         "trace-event JSON (open in Perfetto)")
+    ap.add_argument("--metrics-out", default="",
+                    help="dump the process metric registry (every "
+                         "labeled series) as JSON after the replay")
+    ap.add_argument("--events-out", default="",
+                    help="append JSON-lines structured events here")
+    ap.add_argument("--profile-dir", default="",
+                    help="wrap the replay in jax.profiler.trace writing "
+                         "to this directory (TensorBoard/Perfetto)")
     args = ap.parse_args()
     if args.mode == "lm":
         serve_lm(args)

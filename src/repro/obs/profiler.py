@@ -1,0 +1,206 @@
+"""JAX-level observability: compile-event watching, device-memory /
+live-buffer gauges, and ``jax.profiler`` session wrapping.
+
+Compile watching turns the serving stack's zero-recompile discipline
+(docs/SERVING.md, docs/MUTATION.md) from a test-time assertion into an
+exported counter: ``CompileWatcher`` registers a ``jax.monitoring``
+duration listener and counts XLA backend compiles into
+``obs.xla_compiles`` — labeled by *region*, because not every compile
+is equal. The serving engine tags its execution windows with
+``compile_region``:
+
+  warmup       pre-warming the bucketed entry points (compiles expected)
+  serve_read   the distance hot path          — MUST stay 0 after warmup
+  serve_path   pre-warmed path tiers (+ the metered host fallback,
+               which is documented to compile at unwarmed shapes)
+  mutation     COW apply / state build (eager scatters may compile
+               small executables; never on the read path)
+  other        anything untagged
+
+``launch/serve.py --mode mutate`` exits nonzero if ``serve_read``
+compiles are ever counted after warmup.
+
+On JAX builds without ``jax.monitoring`` listener support the watcher
+degrades to inactive (``supported = False``) — the cache-size probes in
+``DistanceServer.compile_cache_sizes()`` remain the fallback gate.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+from repro.obs.registry import REGISTRY
+
+__all__ = ["CompileWatcher", "compile_region", "current_region",
+           "device_memory_gauges", "version_family_gauges",
+           "profiler_session"]
+
+# Duration events jax._src.dispatch emits per XLA backend compile (the
+# jaxpr-trace event fires on cache *misses* at the jit layer too, which
+# is why backend_compile is the recompile signal).
+BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_region = threading.local()
+
+
+def current_region() -> str:
+    return getattr(_region, "name", "other")
+
+
+@contextlib.contextmanager
+def compile_region(name: str):
+    """Tag compiles triggered inside this block with ``name``."""
+    prev = current_region()
+    _region.name = name
+    try:
+        yield
+    finally:
+        _region.name = prev
+
+
+class CompileWatcher:
+    """Counts XLA backend compiles per region into the registry.
+
+    Use as a context manager or ``start()``/``stop()``. Counters:
+      obs.xla_compiles{region=...}          compile count
+      obs.xla_compile_seconds{region=...}   summed compile wall time
+    """
+
+    def __init__(self, registry=None):
+        self.registry = registry if registry is not None else REGISTRY
+        self.compiles = self.registry.counter(
+            "obs.xla_compiles", "XLA backend compiles by region")
+        self.compile_seconds = self.registry.counter(
+            "obs.xla_compile_seconds", "XLA backend compile wall time")
+        self.supported = False
+        self._active = False
+
+    # ------------------------------------------------------- listener
+    def _on_event(self, event: str, duration: float, **kw) -> None:
+        if not self._active or event != BACKEND_COMPILE_EVENT:
+            return
+        region = current_region()
+        self.compiles.inc(1, region=region)
+        self.compile_seconds.inc(float(duration), region=region)
+
+    def start(self) -> "CompileWatcher":
+        if self._active:
+            return self
+        try:
+            jax.monitoring.register_event_duration_secs_listener(
+                self._on_event)
+            self.supported = True
+        except Exception:
+            self.supported = False
+        self._active = True
+        return self
+
+    def stop(self) -> None:
+        if not self._active:
+            return
+        self._active = False
+        if self.supported:
+            try:
+                from jax._src import monitoring as _mon
+                _mon._unregister_event_duration_listener_by_callback(
+                    self._on_event)
+            except Exception:
+                pass      # listener stays registered but inert (_active)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -------------------------------------------------------- queries
+    def count(self, region: str | None = None) -> int:
+        if region is not None:
+            return int(self.compiles.value(region=region))
+        return int(self.compiles.total())
+
+    def snapshot(self) -> dict:
+        return {dict(k)["region"]: int(s[0])
+                for k, s in self.compiles._series.items()}
+
+
+# ------------------------------------------------------------- memory
+def device_memory_gauges(registry=None) -> dict:
+    """Sample process-wide live-buffer and device-memory gauges.
+
+      obs.live_buffers                live jax.Array count
+      obs.live_buffer_bytes           their summed nbytes
+      obs.device_bytes_in_use{device} allocator stats where the backend
+                                      exposes them (TPU/GPU; CPU: absent)
+    """
+    reg = registry if registry is not None else REGISTRY
+    arrs = jax.live_arrays()
+    nbytes = sum(int(getattr(a, "nbytes", 0)) for a in arrs)
+    reg.gauge("obs.live_buffers", "live jax.Array count").set(len(arrs))
+    reg.gauge("obs.live_buffer_bytes", "live jax.Array bytes").set(nbytes)
+    out = {"live_buffers": len(arrs), "live_buffer_bytes": nbytes}
+    g = reg.gauge("obs.device_bytes_in_use", "allocator bytes in use")
+    for dev in jax.devices():
+        try:
+            stats = dev.memory_stats()
+        except Exception:
+            stats = None
+        if stats and "bytes_in_use" in stats:
+            g.set(stats["bytes_in_use"], device=str(dev.id))
+            out[f"device{dev.id}_bytes_in_use"] = int(stats["bytes_in_use"])
+    return out
+
+
+def version_family_gauges(manager, registry=None, server: str = "default"
+                          ) -> dict:
+    """Per-version-family device footprint (docs/MUTATION.md):
+
+      versions.live{server}         live version count
+      versions.state_bytes{server}  summed device bytes of live
+                                    ``VersionState`` pytrees (COW-shared
+                                    leaves counted once, by id)
+      versions.current_vid{server}
+    """
+    reg = registry if registry is not None else REGISTRY
+    seen: set = set()
+    nbytes = 0
+    for vid in manager.live_versions():
+        state = manager._versions[vid].state
+        if state is None:
+            continue
+        for leaf in jax.tree_util.tree_leaves(state):
+            if id(leaf) not in seen:
+                seen.add(id(leaf))
+                nbytes += int(getattr(leaf, "nbytes", 0))
+    live = len(manager.live_versions())
+    reg.gauge("versions.live", "live index versions").set(live,
+                                                          server=server)
+    reg.gauge("versions.state_bytes",
+              "device bytes pinned by live version states").set(
+        nbytes, server=server)
+    reg.gauge("versions.current_vid", "published version id").set(
+        manager.current.vid, server=server)
+    return {"live": live, "state_bytes": nbytes,
+            "current_vid": manager.current.vid}
+
+
+# ------------------------------------------------------------ profiler
+@contextlib.contextmanager
+def profiler_session(log_dir: str | None):
+    """``jax.profiler.trace`` wrapper: a no-op when ``log_dir`` is falsy
+    or this JAX build lacks the profiler, so call sites need no
+    branching. The written trace opens in TensorBoard / Perfetto and
+    carries the ``jax.named_scope`` annotations the kernel dispatch
+    layer emits (islabel.label_intersect / islabel.core_relax*)."""
+    if not log_dir:
+        yield False
+        return
+    try:
+        ctx = jax.profiler.trace(str(log_dir))
+    except Exception:
+        yield False
+        return
+    with ctx:
+        yield True

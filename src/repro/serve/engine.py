@@ -75,6 +75,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.profiler import compile_region
+from repro.obs.registry import REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.serve.batcher import MicroBatcher, PendingRequest
 from repro.serve.cache import LRUCache
 from repro.serve.metrics import ServeMetrics
@@ -121,13 +124,16 @@ class DistanceServer:
                  cache_size: int = 65536, cache_symmetric: bool = False,
                  backend: str | None = None, warmup: bool = True,
                  path_hop_caps=None, versioned: bool = False,
-                 version_kwargs: dict | None = None):
+                 version_kwargs: dict | None = None,
+                 tracer=None, registry=None):
         self.index = index
         self.name = name
         self.buckets = tuple(sorted(int(b) for b in buckets))
         self.max_wait_s = float(max_wait_ms) * 1e-3
         self.backend = backend
-        self.metrics = ServeMetrics()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.registry = registry if registry is not None else REGISTRY
+        self.metrics = ServeMetrics(server=name, registry=self.registry)
         self.cache = LRUCache(cache_size, symmetric=cache_symmetric)
         self.lanes = {lane: MicroBatcher(self.buckets, self.max_wait_s)
                       for lane in LANES}
@@ -142,13 +148,15 @@ class DistanceServer:
                     "versioned serving is unsharded-only; mutate a "
                     "ShardedIndex via apply_mutations and re-register")
             from repro.serve.versions import VersionManager
-            self.versions = VersionManager.from_index(
-                index, **(version_kwargs or {}))
+            with compile_region("warmup"):
+                self.versions = VersionManager.from_index(
+                    index, **(version_kwargs or {}))
             self._no_core_entry = self.versions.current.mu_mask
             self._fns = {"mu": self.versions.family.mu_fn(backend),
                          "full": self.versions.family.full_fn(backend)}
         else:
-            self._no_core_entry = mu_exact_mask(index)
+            with compile_region("warmup"):
+                self._no_core_entry = mu_exact_mask(index)
             self._fns = {"mu": index.engine.mu_batch_fn(backend),
                          "full": index.engine.batch_fn(backend)}
         self.path_hop_caps = (tuple(sorted(int(h) for h in path_hop_caps))
@@ -180,7 +188,8 @@ class DistanceServer:
             raise ValueError("versioned server: mutate through "
                              "submit_mutation(ops, now) instead")
         self.cache.clear()
-        self._no_core_entry = mu_exact_mask(self.index)
+        with compile_region("warmup"):
+            self._no_core_entry = mu_exact_mask(self.index)
         self._fns = {"mu": self.index.engine.mu_batch_fn(self.backend),
                      "full": self.index.engine.batch_fn(self.backend)}
         if self.path_hop_caps:
@@ -198,13 +207,15 @@ class DistanceServer:
         jit cache sizes). With a path lane, every (bucket, hop_cap)
         tier is pre-compiled too."""
         t0 = time.perf_counter()
-        if self.versions is not None:
-            timings = self.versions.warmup(self.buckets, self.backend)
-        else:
-            timings = self.index.engine.warmup(self.buckets, self.backend)
-        if self.path_hop_caps:
-            timings.update(self.index.path_engine().warmup(
-                self.buckets, self.path_hop_caps, self.backend))
+        with compile_region("warmup"):
+            if self.versions is not None:
+                timings = self.versions.warmup(self.buckets, self.backend)
+            else:
+                timings = self.index.engine.warmup(self.buckets,
+                                                   self.backend)
+            if self.path_hop_caps:
+                timings.update(self.index.path_engine().warmup(
+                    self.buckets, self.path_hop_caps, self.backend))
         self.warmup_seconds = time.perf_counter() - t0
         return timings
 
@@ -254,6 +265,9 @@ class DistanceServer:
         if hit is not None:
             self._results[rid] = hit
             self.metrics.record_cache_hit()
+            self.tracer.event("cache_hit", now, cat="request",
+                              trace_id=rid, track="lane:cache",
+                              s=int(s), t=int(t))
             return rid
         if lane is None:
             lane = str(self.route(s, t)[0])
@@ -273,6 +287,9 @@ class DistanceServer:
         if hit is not None:
             self._results[rid] = hit
             self.metrics.record_cache_hit()
+            self.tracer.event("cache_hit", now, cat="request",
+                              trace_id=rid, track="lane:cache",
+                              s=int(s), t=int(t), lane="path")
             return rid
         self.lanes[PATH_LANE].add(
             PendingRequest(rid, int(s), int(t), float(now)))
@@ -306,16 +323,43 @@ class DistanceServer:
         return (reqs, p, jnp.asarray(np.pad(s, (0, pad), mode="edge")),
                 jnp.asarray(np.pad(t, (0, pad), mode="edge")))
 
+    def _trace_batch(self, lane: str, batch, reqs, exec_s: float,
+                     **exec_args) -> None:
+        """Emit the request-lifecycle spans for one executed batch.
+        Sits entirely outside the timed execution window, so tracing
+        cost never lands in ``exec_s`` (and thus never in qps_compute).
+
+        Timeline semantics (docs/OBSERVABILITY.md): queue waits live on
+        the serving clock, the measured device execution is charged as
+        an interval starting at the flush instant — so every request
+        span's duration equals its recorded latency exactly, and its
+        queue_wait + device_exec children cover all of it."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        track = f"lane:{lane}"
+        for r in reqs:
+            flush = max(r.t_arrival, batch.t_flush)
+            sp = tr.start("request", r.t_arrival, cat="request",
+                          trace_id=r.rid, track=track, lane=lane,
+                          s=r.s, t=r.t, bucket=batch.bucket)
+            tr.add("queue_wait", r.t_arrival, flush, cat="wait",
+                   trace_id=r.rid, parent=sp, track=track)
+            tr.add("device_exec", flush, flush + exec_s, cat="exec",
+                   trace_id=r.rid, parent=sp, track=track, **exec_args)
+            tr.end(sp, flush + exec_s)
+
     def _execute(self, lane: str, batch) -> int:
         reqs, p, s_pad, t_pad = self._batch_arrays(batch)
         version = None if self.versions is None else self.versions.acquire()
-        t0 = time.perf_counter()
-        if version is not None:
-            out = self._fns[lane](version.state, s_pad, t_pad)
-        else:
-            out = self._fns[lane](s_pad, t_pad)
-        out = jax.block_until_ready(out)
-        exec_s = time.perf_counter() - t0
+        with compile_region("serve_read"):
+            t0 = time.perf_counter()
+            if version is not None:
+                out = self._fns[lane](version.state, s_pad, t_pad)
+            else:
+                out = self._fns[lane](s_pad, t_pad)
+            out = jax.block_until_ready(out)
+            exec_s = time.perf_counter() - t0
         if version is not None:
             self.versions.release(version)
         if lane == "full":
@@ -331,6 +375,8 @@ class DistanceServer:
             wait = max(0.0, batch.t_flush - r.t_arrival)
             self.metrics.record_latency(wait + exec_s)
         self.metrics.record_batch(lane, batch.bucket, p, exec_s, rounds)
+        self._trace_batch(lane, batch, reqs, exec_s, rounds=rounds,
+                          vid=None if version is None else version.vid)
         return p
 
     def _execute_path(self, batch) -> int:
@@ -343,19 +389,29 @@ class DistanceServer:
         fallback's full cost (compiles included) is charged to the
         batch's execution time below."""
         reqs, p, s_pad, t_pad = self._batch_arrays(batch)
+        tr = self.tracer
         exec_s, out = 0.0, None
         for hop_cap in self.path_hop_caps:
-            t0 = time.perf_counter()
-            out = jax.block_until_ready(self._path_fns[hop_cap](s_pad, t_pad))
-            exec_s += time.perf_counter() - t0
+            with compile_region("serve_path"):
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(
+                    self._path_fns[hop_cap](s_pad, t_pad))
+                tier_s = time.perf_counter() - t0
+            tr.add(f"tier:h{hop_cap}", batch.t_flush + exec_s,
+                   batch.t_flush + exec_s + tier_s, cat="batch",
+                   track="lane:path", hop_cap=hop_cap, bucket=batch.bucket)
+            exec_s += tier_s
             if bool(np.asarray(out.ok)[:p].all()):
                 break
             self.metrics.record_path_overflow()
+            tr.event("escalate", batch.t_flush + exec_s, cat="batch",
+                     track="lane:path", hop_cap=hop_cap)
         dist = np.asarray(out.dist)
         verts = np.asarray(out.verts)
         lens = np.asarray(out.lens)
         ok = np.asarray(out.ok)
         answers = {}
+        n_fallback = 0
         t0 = time.perf_counter()
         for i, r in enumerate(reqs):
             if ok[i]:
@@ -366,13 +422,19 @@ class DistanceServer:
                 # finite distance with an empty path means even the
                 # oracle's escalation ceiling was hit (sharded fallback)
                 # — never report that as a trustworthy path.
+                n_fallback += 1
                 d_host, path = self.index.shortest_path(r.s, r.t)
                 answers[i] = PathAnswer(
                     float(d_host), tuple(path),
                     bool(path) or not np.isfinite(d_host))
         # the fallback is part of what this batch cost the server —
         # charge it to the batch's execution time, not to nobody
-        exec_s += time.perf_counter() - t0
+        host_s = time.perf_counter() - t0
+        if n_fallback:
+            tr.add("host_fallback", batch.t_flush + exec_s,
+                   batch.t_flush + exec_s + host_s, cat="batch",
+                   track="lane:path", requests=n_fallback)
+        exec_s += host_s
         for i, r in enumerate(reqs):
             self._results[r.rid] = answers[i]
             self.path_cache.put(r.s, r.t, answers[i])
@@ -380,6 +442,8 @@ class DistanceServer:
             self.metrics.record_latency(wait + exec_s)
         self.metrics.record_batch(PATH_LANE, batch.bucket, p, exec_s,
                                   int(out.rounds))
+        self._trace_batch(PATH_LANE, batch, reqs, exec_s,
+                          rounds=int(out.rounds))
         return p
 
     # ----------------------------------------------------- mutation lane
@@ -400,14 +464,37 @@ class DistanceServer:
             raise ValueError("server not versioned: pass versioned=True "
                              "(or use ISLabelIndex.insert_vertex + "
                              "refresh() and eat the recompiles)")
+        tr = self.tracer
+        t0 = time.perf_counter()
         self.pump(now, force=True)
+        flush_s = time.perf_counter() - t0
         old = self.versions.current
-        version = self.versions.apply(ops)
+        with compile_region("mutation"):
+            version = self.versions.apply(ops)
+        t1 = time.perf_counter()
         self.index = version.index
         self._no_core_entry = version.mu_mask
         self.cache.clear()
         self.versions.retire(old)
+        retire_s = time.perf_counter() - t1
         self.metrics.record_mutation(len(ops), version.swap_seconds)
+        if tr.enabled:
+            # mutation-lane spans on the serving clock: wall-clock stage
+            # durations laid out end to end from the submit instant
+            msp = tr.start("mutation", now, cat="mutation",
+                           track="lane:mutation", trace_id=version.vid,
+                           ops=len(ops), vid=version.vid)
+            cursor = now
+            stages = [("flush_pending", flush_s)]
+            stages += [(k, version.stage_seconds.get(k, 0.0))
+                       for k in ("cow_apply", "device_update", "publish")]
+            stages.append(("retire", retire_s))
+            for sname, dur in stages:
+                tr.add(sname, cursor, cursor + dur, cat="mutation",
+                       trace_id=version.vid, parent=msp,
+                       track="lane:mutation")
+                cursor += dur
+            tr.end(msp, cursor)
         return version
 
     def drain(self, now: float | None = None) -> int:
@@ -519,5 +606,11 @@ class DistanceServer:
                 "core_cap": self.versions.family.core_cap,
                 "edge_cap": self.versions.family.edge_cap,
             }),
+            # process-wide registry sections: fault-tolerance counters
+            # (repro.fault reports straggler/retry stats here — satellite
+            # visibility through the serving surface) and the compile /
+            # memory observability gauges (docs/OBSERVABILITY.md)
+            "fault": self.registry.section("fault.") or None,
+            "obs": self.registry.section("obs.") or None,
             **self.metrics.snapshot(),
         }

@@ -306,6 +306,10 @@ class IndexVersion:
     mu_mask: np.ndarray          # bool[n]: Type-1-safe endpoints
     touched_rows: np.ndarray     # rows rewritten vs the parent version
     swap_seconds: float = 0.0
+    # per-stage wall time of the apply that produced this version
+    # (cow_apply / device_update / publish) — the mutation-lane trace
+    # spans (docs/OBSERVABILITY.md) are cut from these
+    stage_seconds: dict = dataclasses.field(default_factory=dict)
 
     @property
     def n_core(self) -> int:
@@ -440,6 +444,7 @@ class VersionManager:
                 live.discard(u)
             else:
                 raise ValueError(f"unknown mutation kind {op.kind!r}")
+        t_host = time.perf_counter()
         rows = np.asarray(sorted(touched), np.int64)
         lbl_ids_dev, lbl_d_dev, lbl_pred_dev = self._scatter_rows(
             cur, ids_h, d_h, pred_h, rows)
@@ -450,6 +455,7 @@ class VersionManager:
             vid=self._next_vid, index=clone, state=state,
             store=cur.store.commit(ids_h, d_h, pred_h, rows),
             mu_mask=mu_exact_mask(clone), touched_rows=rows)
+        t_dev = time.perf_counter()
         # success: commit manager state, then publish atomically
         self._core_slot, self._next_slot = slot, next_slot
         self._inserted_live = live
@@ -457,7 +463,11 @@ class VersionManager:
         self._versions[version.vid] = version
         self._refs[version.vid] = 0
         self.current = version
-        version.swap_seconds = time.perf_counter() - t0
+        t_pub = time.perf_counter()
+        version.swap_seconds = t_pub - t0
+        version.stage_seconds = {"cow_apply": t_host - t0,
+                                 "device_update": t_dev - t_host,
+                                 "publish": t_pub - t_dev}
         return version
 
     def _scatter_rows(self, cur, ids_h, d_h, pred_h, rows):
