@@ -9,9 +9,19 @@ reported (``obs_overhead`` in the JSON doc) — the acceptance bound is
 <5% (docs/OBSERVABILITY.md; tracer calls sit outside the timed device
 windows, so the expected overhead is ~0).
 
+The ``frontend`` section sweeps offered QPS through the HTTP front end
+(docs/SERVICE.md): a real ``ServiceFrontend`` on an ephemeral port, a
+paced open-loop client batching queries over one keep-alive
+connection. Latency is measured from each batch's *scheduled* arrival
+(coordinated-omission safe: once the service saturates, backlog shows
+up as p99 growth, not as a silently lower offered rate), and every
+answer that crossed the wire is asserted bitwise against the index.
+
   PYTHONPATH=src python -m benchmarks.bench_serving [--full]
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -41,6 +51,78 @@ def _obs_overhead(idx, n, n_req, rate) -> dict:
                overhead_pct=round(overhead * 100, 2))
     return {"qps_plain": qps["plain"], "qps_traced": qps["traced"],
             "overhead_frac": overhead}
+
+
+def _frontend_sweep(idx, n: int, full: bool) -> list:
+    """Offered QPS vs end-to-end percentile latency over HTTP."""
+    from repro.obs import REGISTRY
+    from repro.serve import (HttpClient, IndexRegistry, ServiceFrontend,
+                             make_trace)
+    rates = (2000.0, 8000.0, 32000.0) if full else (500.0, 2000.0, 8000.0)
+    n_req = 4096 if full else 512
+    batch = 16
+    out = []
+    with REGISTRY.isolated():
+        registry = IndexRegistry()
+        registry.register("default", idx, buckets=(32, 128),
+                          max_wait_ms=2.0, cache_size=65536)
+        fe = ServiceFrontend(registry)
+        host, port = fe.start_background()
+        try:
+            with HttpClient(host, port) as client:
+                for k, rate in enumerate(rates):
+                    # distinct seed per rate: identical pairs would turn
+                    # the later sweeps into pure LRU-cache replays
+                    trace = make_trace("uniform", n=n, num_requests=n_req,
+                                       rate_qps=rate, seed=3 + k)
+                    # one throwaway batch outside the clock: first-touch
+                    # costs (connection, result plumbing) are not load
+                    client.query_batch(list(zip(trace.s[:batch].tolist(),
+                                                trace.t[:batch].tolist())))
+                    lat, got = [], np.empty(n_req, np.float32)
+                    t0 = time.perf_counter()
+                    for lo in range(0, n_req, batch):
+                        hi = min(lo + batch, n_req)
+                        sched = t0 + float(trace.arrival_s[lo])
+                        wait = sched - time.perf_counter()
+                        if wait > 0:
+                            time.sleep(wait)
+                        got[lo:hi] = client.query_batch(list(zip(
+                            trace.s[lo:hi].tolist(),
+                            trace.t[lo:hi].tolist())))
+                        lat.append(time.perf_counter() - sched)
+                    span = time.perf_counter() - t0
+                    # bitwise audit after the clock stops (an idx.query
+                    # inside the paced loop would charge audit time to
+                    # the service as scheduling lateness)
+                    want = np.asarray(idx.query(trace.s, trace.t),
+                                      np.float32)
+                    assert np.array_equal(got, want), \
+                        f"HTTP answers != index (rate={rate})"
+                    v = np.asarray(lat, np.float64) * 1e3
+                    achieved = n_req / span
+                    common.row("serving", f"http-rate{int(rate)}",
+                               1e6 / achieved,
+                               qps_offered=round(rate),
+                               qps_achieved=round(achieved),
+                               p50_ms=round(float(np.quantile(v, 0.5)), 2),
+                               p99_ms=round(float(np.quantile(v, 0.99)),
+                                            2))
+                    out.append({
+                        "rate_offered_qps": rate,
+                        "qps_achieved": achieved,
+                        "requests": n_req,
+                        "batch": batch,
+                        "latency_ms": {
+                            "p50": float(np.quantile(v, 0.50)),
+                            "p95": float(np.quantile(v, 0.95)),
+                            "p99": float(np.quantile(v, 0.99)),
+                            "mean": float(v.mean()),
+                        },
+                    })
+        finally:
+            fe.stop()
+    return out
 
 
 def _bucket_sets(full: bool):
@@ -96,6 +178,7 @@ def main(full: bool = False) -> None:
                 "warmup_seconds": snap["warmup_seconds"],
             })
     overhead = _obs_overhead(idx, n, n_req, rate)
+    frontend = _frontend_sweep(idx, n, full)
     common.write_json("serving", {
         "graph": {"kind": "rmat14" if full else "er10", "n": int(n),
                   "m": int(len(src))},
@@ -104,6 +187,7 @@ def main(full: bool = False) -> None:
         "full": full,
         "results": results,
         "obs_overhead": overhead,
+        "frontend": frontend,
     })
 
 

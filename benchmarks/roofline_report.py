@@ -1,128 +1,86 @@
-"""Roofline report (deliverable g): reads experiments/dryrun/*.json and
-emits the per-(arch x shape x mesh) table with the three roofline terms,
-the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS utilization, and
-HBM-fit verdicts. v5e model: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI.
+"""Roofline accounting for the serving kernels (ROADMAP "raw speed").
+
+Attaches an analytic bytes/FLOPs model to the ``label_intersect`` and
+``spmv_relax`` rows the kernel suite emits, so each optimization PR can
+state its roofline position — arithmetic intensity plus achieved GB/s
+and GFLOP/s at the measured ``us_per_call`` — before/after. Rows land
+in ``BENCH_roofline.json`` next to the other trajectory files.
+
+Reads the kernel rows from the current driver run when available
+(``benchmarks.run`` executes the kernels suite first) and falls back to
+a previously written ``BENCH_kernels.json`` under ``--out``/cwd, so
+``--only roofline`` works against the last kernel run:
+
+  PYTHONPATH=src python -m benchmarks.run --only kernels --out bench-out
+  PYTHONPATH=src python -m benchmarks.run --only roofline --out bench-out
+
+Traffic model (compulsory bytes, fp32/int32):
+
+* ``label_intersect[q x l]``: per query, two id rows and two distance
+  rows stream in (``16·l`` bytes) and the l×l equality join does a
+  compare + candidate min-add per pair (``2·l²`` flops) — intensity
+  grows as ``l/8``, so serving-shape label widths sit near the
+  memory/compute knee.
+* ``spmv_relax[q x v]``: per round the dense distance block is read
+  and written (``8·q·v``) over a shared ELL structure
+  (``8·v·d_width``), relaxing ``2·q·v·d_width`` flops — intensity is
+  bounded by ``d_width/4``, firmly memory-bound.
 """
 from __future__ import annotations
 
-import glob
 import json
+import re
 from pathlib import Path
 
-HBM_PER_CHIP = 16e9
+from benchmarks import common
+from benchmarks.common import row
+
+ELL_D_WIDTH = 16        # matches bench_kernels.py's coo_to_ell(d_width=16)
 
 
-def model_flops(arch: str, shape: str) -> float | None:
-    """Useful-work FLOPs: 6·N·D train (N_active for MoE), 2·N_active per
-    decoded/prefilled token."""
-    from repro.configs import registry
-    spec = registry.get_spec(arch)
-    if spec.family == "lm":
-        cfg = spec.model_cfg
-        shp = spec.shape(shape)
-        tokens = shp.global_batch * shp.seq_len
-        n_act = cfg.active_param_count()
-        if shp.kind == "train":
-            return 6.0 * n_act * tokens
-        if shp.kind == "prefill":
-            return 2.0 * n_act * tokens
-        return 2.0 * n_act * shp.global_batch        # decode: 1 token/seq
-    if spec.family == "recsys":
-        shp = spec.shape(shape)
-        cfg = spec.model_cfg
-        per_ex = (cfg.seq_len * 2 * 3 * (cfg.d_behavior + cfg.gru_dim)
-                  * cfg.gru_dim * 2        # two GRUs
-                  + 2 * (cfg.gru_dim + 2 * cfg.d_behavior + 18) * 200
-                  + 2 * 200 * 80)
-        mult = 3.0 if shp.kind == "train" else 1.0
-        if shp.kind == "retrieval":
-            return 2.0 * shp.n_candidates * cfg.embed_dim
-        return mult * per_ex * shp.batch
-    if spec.family == "gnn":
-        shp = spec.shape(shape)
-        cfg = spec.model_cfg
-        e = 2 * shp.n_edges if shp.kind != "molecule" else \
-            2 * shp.batch_graphs * shp.n_edges
-        nn = shp.n_nodes if shp.kind != "molecule" else \
-            shp.batch_graphs * shp.n_nodes
-        h = getattr(cfg, "d_hidden", 64)
-        nl = getattr(cfg, "n_layers", getattr(cfg, "n_blocks", 2))
-        # train fwd+bwd ~ 3x(SpMM gather+dense)
-        return 3.0 * nl * (2.0 * e * h + 2.0 * nn * h * h)
-    return None
+def label_intersect_model(q: int, l: int) -> tuple[float, float]:
+    """(bytes, flops) per *query* — kernel rows report µs per query."""
+    return 16.0 * l, 2.0 * l * l
 
 
-def load(out_dir="experiments/dryrun"):
-    recs = []
-    for f in sorted(glob.glob(f"{out_dir}/*.json")):
-        recs.append(json.loads(Path(f).read_text()))
-    return recs
+def spmv_relax_model(q: int, v: int,
+                     d_width: int = ELL_D_WIDTH) -> tuple[float, float]:
+    """(bytes, flops) per relaxation call over the whole batch."""
+    bytes_ = 8.0 * q * v + 8.0 * v * d_width
+    return bytes_, 2.0 * q * v * d_width
 
 
-def report(out_dir="experiments/dryrun", csv=True):
-    rows = []
-    for r in load(out_dir):
-        if not r.get("ok"):
-            rows.append({"arch": r["arch"], "shape": r["shape"],
-                         "mesh": r["mesh"], "ok": False,
-                         "error": r.get("error", "?")[:80]})
-            continue
-        dev = r["devices"]
-        mf = model_flops(r["arch"], r["shape"])
-        hlo_total = r["flops_per_device"] * dev
-        mem = r.get("mem") or {}
-        hbm_need = (mem.get("argument_size_in_bytes") or 0) + \
-            (mem.get("temp_size_in_bytes") or 0)
-        rows.append({
-            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
-            "ok": True,
-            "t_compute_s": r["t_compute_s"],
-            "t_memory_s": r["t_memory_s"],
-            "t_collective_s": r["t_collective_s"],
-            "dominant": r["dominant"],
-            "model_flops": mf,
-            "useful_ratio": (mf / hlo_total) if mf and hlo_total else None,
-            "bytes_per_device": hbm_need,
-            "fits_hbm": hbm_need <= HBM_PER_CHIP if mem else None,
-            "roofline_frac": None,
-        })
-    # roofline fraction: useful-compute time / dominant-term time
-    for row_ in rows:
-        if row_.get("ok") and row_.get("model_flops"):
-            t_useful = row_["model_flops"] / (197e12 *
-                                              _dev(row_["mesh"]))
-            t_bound = max(row_["t_compute_s"], row_["t_memory_s"],
-                          row_["t_collective_s"])
-            row_["roofline_frac"] = t_useful / t_bound if t_bound else None
-    if csv:
-        hdr = ["arch", "shape", "mesh", "dominant", "t_compute_s",
-               "t_memory_s", "t_collective_s", "useful_ratio",
-               "roofline_frac", "fits_hbm"]
-        print(",".join(hdr))
-        for row_ in rows:
-            if not row_.get("ok"):
-                print(f"{row_['arch']},{row_['shape']},{row_['mesh']},"
-                      f"FAIL,,,,,,{row_.get('error')}")
-                continue
-            print(",".join(_fmt(row_.get(h)) for h in hdr))
-    return rows
-
-
-def _dev(mesh: str) -> int:
-    out = 1
-    for p in mesh.split("x"):
-        out *= int(p)
-    return out
-
-
-def _fmt(v):
-    if isinstance(v, float):
-        return f"{v:.4g}"
-    return str(v)
+def _kernel_rows(out_dir: str) -> list[dict]:
+    rows = [r for r in common._ROWS if r["table"] == "kernels"]
+    if rows:
+        return rows
+    for base in (out_dir, "."):
+        path = Path(base) / "BENCH_kernels.json"
+        if path.exists():
+            return json.loads(path.read_text()).get("rows", [])
+    return []
 
 
 def main(full: bool = False):
-    report()
+    rows = _kernel_rows(common.OUT_DIR)
+    if not rows:
+        print("# roofline: no kernel rows — run the kernels suite first "
+              "(python -m benchmarks.run --only kernels, same --out)")
+        return
+    for r in rows:
+        name, us = r["name"], r["us_per_call"]
+        if m := re.match(r"(label_intersect_\w+)\[(\d+)x(\d+)\]", name):
+            nbytes, flops = label_intersect_model(int(m[2]), int(m[3]))
+        elif m := re.match(r"(spmv_relax_\w+)\[q(\d+),v(\d+)\]", name):
+            nbytes, flops = spmv_relax_model(int(m[2]), int(m[3]))
+        else:
+            continue                  # minplus rows carry gflops already
+        s = us * 1e-6
+        row("roofline", name, us,
+            bytes_per_call=nbytes, flops_per_call=flops,
+            intensity=round(flops / nbytes, 3),
+            gbytes_per_s=round(nbytes / s / 1e9, 3),
+            gflops_per_s=round(flops / s / 1e9, 3))
 
 
 if __name__ == "__main__":

@@ -10,6 +10,9 @@ from repro.obs.profiler import (CompileWatcher, compile_region,
                                 profiler_session, version_family_gauges)
 from repro.obs.registry import (REGISTRY, Counter, Gauge, Histogram,
                                 MetricRegistry, default_latency_buckets)
+from repro.obs.slo import (AlertState, SLOEngine, SLOSpec, compiles_source,
+                           counter_source, default_serving_slos,
+                           latency_source)
 from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
 
 __all__ = [
@@ -18,5 +21,7 @@ __all__ = [
     "device_memory_gauges", "profiler_session", "version_family_gauges",
     "REGISTRY", "Counter", "Gauge", "Histogram", "MetricRegistry",
     "default_latency_buckets",
+    "AlertState", "SLOEngine", "SLOSpec", "compiles_source",
+    "counter_source", "default_serving_slos", "latency_source",
     "NULL_TRACER", "NullTracer", "Span", "Tracer",
 ]

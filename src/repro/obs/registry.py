@@ -23,7 +23,9 @@ a series overflows ``raw_cap`` (set ``raw_cap=0`` to never retain).
 """
 from __future__ import annotations
 
+import contextlib
 import json
+import re
 import threading
 
 import numpy as np
@@ -211,6 +213,21 @@ class Histogram(_Metric):
         top = int(np.flatnonzero(s.counts)[-1])
         return self.buckets[min(top, len(self.buckets) - 1)]
 
+    def count_le(self, bound: float, **labels) -> int:
+        """Observations with value <= ``bound`` — exact while raw values
+        are retained; after raw overflow, the cumulative count of every
+        bucket whose upper bound is <= ``bound`` (an underestimate when
+        ``bound`` falls inside a bucket). The SLO latency source reads
+        good-event counts through this."""
+        s = self._get(labels)
+        if s.count == 0:
+            return 0
+        if s.raw is not None:
+            return int(np.count_nonzero(
+                np.asarray(s.raw, np.float64) <= float(bound)))
+        i = int(np.searchsorted(self._bounds, float(bound), side="right"))
+        return int(s.counts[:i].sum())
+
     def _series_snapshot(self, s) -> dict:
         return {
             "count": int(s.count),
@@ -282,6 +299,106 @@ class MetricRegistry:
     def to_json(self, prefix: str = "", **extra) -> str:
         return json.dumps({"metrics": self.snapshot(prefix), **extra},
                           indent=2, sort_keys=True)
+
+    # ------------------------------------------------ test isolation
+    def reset(self) -> None:
+        """Drop every registered metric. Components holding direct
+        metric references keep recording into their (now detached)
+        objects; fresh ``counter``/``gauge``/``histogram`` calls start
+        clean — the between-tests isolation point (tests construct
+        their servers after the reset)."""
+        with self._lock:
+            self._metrics = {}
+
+    @contextlib.contextmanager
+    def isolated(self):
+        """Run a block against an empty metric map, restoring the
+        previous one afterwards. Because call sites import the module-
+        level ``REGISTRY`` object (never a copy), swapping its internal
+        map is enough: nothing recorded inside the block leaks out, and
+        nothing from outside is visible inside."""
+        with self._lock:
+            saved, self._metrics = self._metrics, {}
+        try:
+            yield self
+        finally:
+            with self._lock:
+                self._metrics = saved
+
+    # ------------------------------------------- Prometheus exposition
+    def render_prometheus(self, prefix: str = "") -> str:
+        """Prometheus text exposition (format version 0.0.4) of every
+        metric under ``prefix`` — the front end's ``/metrics`` body.
+
+        Rules (so real Prometheus scrapers and the round-trip parser in
+        tests both accept the output): metric names are sanitized to
+        ``[a-zA-Z_:][a-zA-Z0-9_:]*`` (dots become underscores), labels
+        are emitted in sorted-key order, label values escape ``\\``,
+        ``\"`` and newlines, HELP text escapes ``\\`` and newlines, and
+        histograms expose cumulative ``_bucket{le=...}`` series ending
+        in ``le="+Inf"`` plus ``_sum`` and ``_count``.
+        """
+        lines: list[str] = []
+        for name, m in sorted(self._metrics.items()):
+            if not name.startswith(prefix):
+                continue
+            pname = _prom_name(name)
+            if m.help:
+                lines.append(f"# HELP {pname} {_prom_escape_help(m.help)}")
+            lines.append(f"# TYPE {pname} {m.kind}")
+            for key, s in sorted(m._series.items()):
+                labels = dict(key)
+                if m.kind == "histogram":
+                    cum = 0
+                    for bound, cnt in zip(m.buckets, s.counts):
+                        cum += int(cnt)
+                        lines.append(_prom_line(
+                            pname + "_bucket",
+                            {**labels, "le": _prom_float(bound)}, cum))
+                    lines.append(_prom_line(
+                        pname + "_bucket", {**labels, "le": "+Inf"},
+                        int(s.count)))
+                    lines.append(_prom_line(pname + "_sum", labels, s.sum))
+                    lines.append(_prom_line(pname + "_count", labels,
+                                            int(s.count)))
+                else:
+                    lines.append(_prom_line(pname, labels, s[0]))
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+_PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    out = _PROM_BAD.sub("_", name)
+    if not out or out[0].isdigit():
+        out = "_" + out
+    return out
+
+
+def _prom_escape_label(v) -> str:
+    return (str(v).replace("\\", r"\\").replace("\n", r"\n")
+            .replace('"', r'\"'))
+
+
+def _prom_escape_help(v: str) -> str:
+    return str(v).replace("\\", r"\\").replace("\n", r"\n")
+
+
+def _prom_float(v: float) -> str:
+    """Shortest exact decimal for a bucket bound / sample value."""
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f)) + ".0"
+    return repr(f)
+
+
+def _prom_line(name: str, labels: dict, value) -> str:
+    lbl = ",".join(f'{k}="{_prom_escape_label(v)}"'
+                   for k, v in sorted(labels.items()))
+    val = (_prom_float(value) if isinstance(value, float)
+           else str(int(value)))
+    return f"{name}{{{lbl}}} {val}" if lbl else f"{name} {val}"
 
 
 # The process-wide default registry every component reports through.

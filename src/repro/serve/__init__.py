@@ -1,14 +1,18 @@
 # repro.serve — the distance/path-serving subsystem over ISLabelIndex:
 # shape-bucket micro-batching, μ-exact routing, LRU caching, metrics,
 # a multi-graph registry, a scenario load generator, a batched
-# shortest-path lane (docs/PATHS.md), and versioned copy-on-write
-# index mutation under live traffic (docs/MUTATION.md).
+# shortest-path lane (docs/PATHS.md), versioned copy-on-write index
+# mutation under live traffic (docs/MUTATION.md), replica groups with
+# straggler health (docs/SERVICE.md), and an asyncio HTTP front end.
 from repro.serve.batcher import Batch, MicroBatcher, PendingRequest
 from repro.serve.cache import LRUCache
 from repro.serve.engine import DistanceServer, PathAnswer, mu_exact_mask
+from repro.serve.frontend import (HttpClient, ServiceFrontend, SSEReader,
+                                  replay_http)
 from repro.serve.loadgen import SCENARIOS, Trace, make_trace
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import IndexRegistry
+from repro.serve.replicas import ReplicaSet
 from repro.serve.versions import (FamilyCapacityError, IndexVersion,
                                   LabelBlockStore, MutationOp, VersionFamily,
                                   VersionManager, VersionState)
@@ -16,7 +20,8 @@ from repro.serve.versions import (FamilyCapacityError, IndexVersion,
 __all__ = [
     "Batch", "MicroBatcher", "PendingRequest", "LRUCache",
     "DistanceServer", "PathAnswer", "mu_exact_mask", "SCENARIOS", "Trace",
-    "make_trace", "ServeMetrics", "IndexRegistry", "FamilyCapacityError",
-    "IndexVersion", "LabelBlockStore", "MutationOp", "VersionFamily",
-    "VersionManager", "VersionState",
+    "make_trace", "ServeMetrics", "IndexRegistry", "ReplicaSet",
+    "ServiceFrontend", "HttpClient", "SSEReader", "replay_http",
+    "FamilyCapacityError", "IndexVersion", "LabelBlockStore", "MutationOp",
+    "VersionFamily", "VersionManager", "VersionState",
 ]

@@ -175,6 +175,12 @@ class DistanceServer:
         self._results: dict[int, object] = {}
         self._next_rid = 0
         self.warmup_seconds = 0.0
+        # fault-injection hook (repro.serve.replicas): synthetic stall
+        # added to every distance batch's charged execution time. Purely
+        # accounting-side — no real sleep — so straggler scenarios stay
+        # deterministic on the serving clock while latency metrics,
+        # straggler monitors, and SLO burn rates all see the slowdown.
+        self.exec_delay_s = 0.0
         if warmup:
             self.warmup()
 
@@ -359,7 +365,7 @@ class DistanceServer:
             else:
                 out = self._fns[lane](s_pad, t_pad)
             out = jax.block_until_ready(out)
-            exec_s = time.perf_counter() - t0
+            exec_s = time.perf_counter() - t0 + self.exec_delay_s
         if version is not None:
             self.versions.release(version)
         if lane == "full":

@@ -21,6 +21,13 @@ Scenarios (endpoint distribution × arrival process):
   * ``repeated`` — requests drawn from a small fixed pool of (s, t)
     pairs, Poisson arrivals. Dashboard/monitoring shape; upper-bounds
     cache effectiveness.
+  * ``straggler`` — uniform endpoints and arrivals, plus a
+    failure-injection plan in ``meta["inject"]``: one replica of a
+    ``ReplicaSet`` is given a synthetic per-batch stall
+    (``DistanceServer.exec_delay_s``), so replaying the same trace with
+    and without injection is the clean/degraded pair the SLO burn-rate
+    alert tests and the CI http-serving smoke compare. Answers stay
+    bitwise exact — only timing degrades.
   * ``readwrite`` — uniform reads with §8.3 mutation batches mixed in
     at ``write_ratio``: inserts draw a vertex from a spare pool and
     attach it to core vertices (initial core + live inserted — the
@@ -197,12 +204,28 @@ def readwrite_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
         writes=writes)
 
 
+def straggler_trace(n: int, num_requests: int, rate_qps: float = 50_000.0,
+                    seed: int = 0, stall_replica: int = 0,
+                    stall_s: float = 5.0) -> Trace:
+    """Uniform load with a straggler-injection plan: ``stall_replica``
+    of the serving ``ReplicaSet`` gets ``stall_s`` of synthetic stall
+    charged to every distance batch it executes
+    (``ReplicaSet.apply_injection`` reads ``meta["inject"]``)."""
+    base = uniform_trace(n, num_requests, rate_qps, seed)
+    return Trace(
+        "straggler", base.arrival_s, base.s, base.t,
+        {**base.meta,
+         "inject": {"replica": int(stall_replica),
+                    "stall_s": float(stall_s)}})
+
+
 SCENARIOS = {
     "uniform": uniform_trace,
     "hotspot": hotspot_trace,
     "bursty": bursty_trace,
     "repeated": repeated_trace,
     "readwrite": readwrite_trace,
+    "straggler": straggler_trace,
 }
 
 

@@ -1,0 +1,233 @@
+"""Tier-1 tests for the HTTP front end (``repro.serve.frontend``):
+bitwise-exact answers over the wire (single, batched, and through the
+versioned mutation lane), HTTP error mapping, the ``/metrics``
+Prometheus exposition round-tripped through a strict text-format
+parser, ``/stats`` with the SLO block, and SSE framing — metrics
+frames on change, heartbeat comments when idle, live ``slo_alert``
+relay from the ``EventLog``.
+
+One real front end runs for the whole module on a background loop
+thread (port 0 → ephemeral), over a versioned ``DistanceServer`` so
+the mutation lane is exercised end to end.
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import re
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import IndexConfig, ISLabelIndex
+from repro.graphs import generators as gen
+from repro.obs import REGISTRY, EventLog, SLOEngine, default_serving_slos
+from repro.serve import (HttpClient, IndexRegistry, MutationOp,
+                         ServiceFrontend, SSEReader)
+
+# ---------------------------------------------------------- prometheus
+_PROM_LINE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"            # metric name
+    r"(?:\{((?:[a-zA-Z_][a-zA-Z0-9_]*=\"(?:[^\"\\\n]|\\.)*\",?)*)\})?"
+    r" (\S+)$")
+_PROM_LABEL = re.compile(r"([a-zA-Z_][a-zA-Z0-9_]*)=\"((?:[^\"\\\n]|\\.)*)\"")
+
+
+def parse_prometheus(text: str):
+    """Strict parse of the text exposition format (0.0.4): returns
+    ``(types, samples)`` where ``samples[(name, labelitems)] -> float``.
+    Raises on any line that is not a comment, blank, or a well-formed
+    sample — the round-trip gate for ``render_prometheus``."""
+    types: dict[str, str] = {}
+    samples: dict[tuple, float] = {}
+    for line in text.splitlines():
+        if not line or line.startswith("# HELP"):
+            continue
+        if line.startswith("# TYPE"):
+            _, _, name, kind = line.split(None, 3)
+            assert kind in ("counter", "gauge", "histogram"), kind
+            types[name] = kind
+            continue
+        m = _PROM_LINE.match(line)
+        assert m, f"malformed exposition line: {line!r}"
+        name, raw_labels, value = m.groups()
+        labels = tuple(sorted(
+            (k, v.encode().decode("unicode_escape"))
+            for k, v in _PROM_LABEL.findall(raw_labels or "")))
+        key = (name, labels)
+        assert key not in samples, f"duplicate sample {key}"
+        samples[key] = float(value)
+    return types, samples
+
+
+# -------------------------------------------------------------- fixture
+@pytest.fixture(scope="module")
+def stack():
+    with REGISTRY.isolated():
+        n, src, dst, w = gen.er_graph(120, 2.4, seed=5)
+        idx = ISLabelIndex.build(n + 6, src, dst, w,
+                                 IndexConfig(l_cap=96, label_chunk=64))
+        registry = IndexRegistry()
+        registry.register("default", idx, buckets=(8, 32),
+                          max_wait_ms=1.0, versioned=True)
+        log = EventLog()
+        slo = SLOEngine(
+            default_serving_slos(latency_threshold_s=1.0,
+                                 fast_window_s=2.0, slow_window_s=8.0,
+                                 resolve_hold_s=1.0),
+            log=log)
+        fe = ServiceFrontend(registry, slo=slo, log=log,
+                             sse_interval_s=0.05, heartbeat_s=0.3)
+        host, port = fe.start_background()
+        yield {"fe": fe, "host": host, "port": port, "idx": idx,
+               "log": log, "slo": slo}
+        fe.stop()
+
+
+@pytest.fixture()
+def client(stack):
+    with HttpClient(stack["host"], stack["port"]) as c:
+        yield c
+
+
+def _far_pair(idx, min_d=2.0, max_d=9.0):
+    """A core pair whose distance a unit bridge provably shortens."""
+    core = np.asarray(idx.core_ids, np.int32)
+    aa, bb = np.meshgrid(core, core, indexing="ij")
+    d = np.asarray(idx.query(aa.ravel(), bb.ravel()), np.float32)
+    j = np.flatnonzero((d > min_d) & (d < max_d))
+    assert len(j), "no bridgeable pair in fixture graph"
+    return int(aa.ravel()[j[0]]), int(bb.ravel()[j[0]]), d[j[0]]
+
+
+# ----------------------------------------------------------- endpoints
+def test_healthz_and_unknown_route(stack, client):
+    out = client.healthz()
+    assert out["ok"] is True and out["uptime_s"] >= 0.0
+    with pytest.raises(RuntimeError, match="404"):
+        client._call("GET", "/nope")
+
+
+def test_query_single_and_batch_are_bitwise_exact(stack, client):
+    idx = stack["idx"]
+    r = np.random.default_rng(7)
+    core = np.asarray(idx.core_ids, np.int32)
+    s = r.choice(core, 24)
+    t = r.choice(core, 24)
+    want = np.asarray(idx.query(s, t), np.float32)
+    got_one = np.asarray([client.query(int(a), int(b))[0]
+                          for a, b in zip(s, t)], np.float32)
+    got_batch = client.query_batch(list(zip(s.tolist(), t.tolist())))
+    fin = np.isfinite(want)
+    for got in (got_one, got_batch):
+        assert got.dtype == np.float32
+        assert (np.isfinite(got) == fin).all()
+        np.testing.assert_array_equal(got[fin], want[fin])
+
+
+def test_bad_requests_map_to_http_errors(stack, client):
+    with pytest.raises(RuntimeError, match="400"):
+        client._call("POST", "/query", {"s": 1})          # missing "t"
+    with pytest.raises(RuntimeError, match="404"):
+        client._call("POST", "/query", {"graph": "nope", "s": 0, "t": 1})
+    with pytest.raises(RuntimeError, match="400"):
+        client._call("POST", "/mutate", {"ops": []})
+    with pytest.raises(RuntimeError, match="400"):        # versioned: no
+        client._call("POST", "/path", {"s": 0, "t": 1})   # path lane
+    conn = http.client.HTTPConnection(stack["host"], stack["port"],
+                                      timeout=10)
+    conn.request("POST", "/query", body=b"{not json",
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    assert resp.status == 400
+    assert "bad JSON" in json.loads(resp.read())["error"]
+    conn.close()
+
+
+def test_mutate_advances_version_and_reads_observe_it(stack, client):
+    idx = stack["idx"]
+    a, b, d_old = _far_pair(idx)
+    u = idx.n - 1                                  # last spare, not core
+    ans0, vid0 = client.query(a, b)
+    assert ans0 == d_old
+    vid1 = client.mutate([MutationOp("insert", u, (a, b), (1.0, 1.0))])
+    assert vid1 == vid0 + 1
+    ans1, vid_now = client.query(a, b)
+    assert vid_now == vid1
+    assert ans1 == np.float32(2.0) and ans1 != ans0    # bridge took
+    vid2 = client.mutate([MutationOp("delete", u)])
+    ans2, _ = client.query(a, b)
+    assert vid2 == vid1 + 1 and ans2 == d_old
+
+
+def test_stats_exposes_graphs_and_slo_block(stack, client):
+    out = client.stats()
+    assert out["uptime_s"] > 0.0
+    assert "default" in out["graphs"]
+    assert set(out["slo"]) == {"availability", "latency", "exactness",
+                               "read_compiles"}
+    assert out["slo_breaches"]["fired"] == []
+
+
+def test_metrics_round_trips_through_prometheus_parser(stack, client):
+    text = client.metrics_text()
+    types, samples = parse_prometheus(text)
+    assert types["http_requests"] == "counter"
+    assert types["serve_latency_seconds"] == "histogram"
+    # the /query traffic from earlier tests is on the books
+    total = sum(v for (name, labels), v in samples.items()
+                if name == "http_requests"
+                and dict(labels).get("route") == "/query")
+    assert total > 0
+    # histogram invariants: cumulative buckets end at _count
+    buckets = sorted(
+        ((dict(labels)["le"], v) for (name, labels), v in samples.items()
+         if name == "serve_latency_seconds_bucket"),
+        key=lambda kv: float("inf") if kv[0] == "+Inf" else float(kv[0]))
+    assert buckets and buckets[-1][0] == "+Inf"
+    counts = [v for _, v in buckets]
+    assert counts == sorted(counts)
+    count = sum(v for (name, _), v in samples.items()
+                if name == "serve_latency_seconds_count")
+    assert counts[-1] == count > 0
+
+
+# ------------------------------------------------------------------ SSE
+def test_sse_emits_metrics_frames_then_heartbeats(stack, client):
+    reader = SSEReader(stack["host"], stack["port"], timeout_s=10.0)
+    try:
+        client.query(0, 1)                 # perturb the metrics frame
+        events = reader.read_events(max_events=8, max_s=5.0)
+        frames = [d for e, d in events if e == "metrics"]
+        assert frames, f"no metrics frame in {events}"
+        g = frames[0]["graphs"]["default"]
+        assert g["served"] > 0 and "batches" in g and "cache_hits" in g
+        assert "slo" in frames[0] and "ts" in frames[0]
+        # idle stream: heartbeat comments keep the connection alive
+        more = reader.read_events(max_events=24, max_s=3.0)
+        assert ("comment", None) in more
+    finally:
+        reader.close()
+
+
+def test_sse_relays_slo_alerts_live(stack, client):
+    fe, slo = stack["fe"], stack["slo"]
+    reader = SSEReader(stack["host"], stack["port"], timeout_s=10.0)
+    try:
+        # inject exactness failures on the loop thread (it owns the
+        # engine) — burn saturates and the next slo step fires
+        fe._loop.call_soon_threadsafe(
+            lambda: slo.record("exactness", fe._now(), bad=5))
+        deadline = time.monotonic() + 8.0
+        alerts = []
+        while not alerts and time.monotonic() < deadline:
+            alerts = [d for e, d in reader.read_events(max_events=8,
+                                                       max_s=2.0)
+                      if e == "slo_alert"]
+        assert alerts, "no slo_alert frame arrived over /events"
+        assert alerts[0]["slo"] == "exactness"
+        assert alerts[0]["state"] == "fire"
+        assert "exactness" in slo.breach_summary()["fired"]
+    finally:
+        reader.close()

@@ -452,3 +452,80 @@ def test_fault_events_surface_in_registry_and_server_stats(index,
     fault = srv.stats()["fault"]
     assert any(k.startswith("fault.events") for k in fault)
     assert any(k.startswith("fault.step_seconds_ema") for k in fault)
+
+
+# ---------------------------------------------- registry: new surfaces
+def test_histogram_count_le_exact_then_bucketed():
+    reg = MetricRegistry()
+    h = reg.histogram("t.le", buckets=(1.0, 2.0, 8.0), raw_cap=8)
+    for v in (0.5, 1.0, 1.5, 3.0):
+        h.observe(v)
+    # raw retained: exact at arbitrary bounds, boundary inclusive
+    assert h.count_le(0.0) == 0
+    assert h.count_le(1.0) == 2
+    assert h.count_le(1.2) == 2
+    assert h.count_le(100.0) == 4
+    for v in [0.5] * 6:                       # push past raw_cap
+        h.observe(v)
+    assert h.values() == []
+    # bucketed: cumulative count of buckets with bound <= the query
+    # (an underestimate inside a bucket, never an overestimate)
+    assert h.count_le(1.0) == 8
+    assert h.count_le(1.9) == 8               # 1.5 now invisible
+    assert h.count_le(2.0) == 9
+    assert h.count_le(7.0) == 9
+
+
+def test_registry_reset_detaches_old_metrics():
+    reg = MetricRegistry()
+    c = reg.counter("t.c", "")
+    c.inc(5)
+    reg.reset()
+    assert reg.get("t.c") is None
+    c2 = reg.counter("t.c", "")
+    assert c2 is not c and c2.total() == 0
+    c.inc(1)                                  # old handle records into a
+    assert c2.total() == 0                    # detached object only
+
+
+def test_registry_isolated_blocks_leaks_both_ways():
+    reg = MetricRegistry()
+    outer = reg.counter("t.out", "")
+    outer.inc(3)
+    with reg.isolated():
+        assert reg.get("t.out") is None       # outside not visible
+        reg.counter("t.in", "").inc(7)
+        assert reg.get("t.in").total() == 7
+    assert reg.get("t.in") is None            # inside did not leak
+    assert reg.get("t.out").total() == 3      # restored intact
+
+
+def test_render_prometheus_round_trip():
+    from tests.test_frontend import parse_prometheus
+    reg = MetricRegistry()
+    reg.counter("serve.requests", "help with\nnewline").inc(
+        3, server="a/r0", code="200")
+    reg.gauge("obs.up", "").set(1.5)
+    h = reg.histogram("serve.lat.seconds", "", buckets=(0.1, 1.0))
+    h.observe(0.05, server='we"ird\\name')
+    h.observe(0.5, server='we"ird\\name')
+    h.observe(5.0, server='we"ird\\name')
+    types, samples = parse_prometheus(reg.render_prometheus())
+    # dotted names sanitize to underscores; kinds survive
+    assert types == {"serve_requests": "counter", "obs_up": "gauge",
+                     "serve_lat_seconds": "histogram"}
+    assert samples[("serve_requests",
+                    (("code", "200"), ("server", "a/r0")))] == 3.0
+    assert samples[("obs_up", ())] == 1.5
+    lbl = ("server", 'we"ird\\name')          # escapes round-trip
+    assert samples[("serve_lat_seconds_bucket",
+                    (("le", "0.1"), lbl))] == 1.0
+    assert samples[("serve_lat_seconds_bucket",
+                    (("le", "1.0"), lbl))] == 2.0
+    assert samples[("serve_lat_seconds_bucket",
+                    (("le", "+Inf"), lbl))] == 3.0
+    assert samples[("serve_lat_seconds_count", (lbl,))] == 3.0
+    assert samples[("serve_lat_seconds_sum",
+                    (lbl,))] == pytest.approx(5.55)
+    # prefix filter narrows the exposition
+    assert "obs_up" not in reg.render_prometheus(prefix="serve.")

@@ -424,3 +424,71 @@ def test_registry_replacement_goes_through_drain(vindex):
     assert old.take_result(rid) == np.float32(2.0)
     assert old.versions.live_versions() == [old.versions.current.vid]
     reg.unregister("g")
+
+
+# ------------------------------------------------------- replica groups
+def _rset(index, **kw):
+    from repro.obs import MetricRegistry
+    from repro.serve import ReplicaSet
+    kw.setdefault("buckets", BUCKETS)
+    kw.setdefault("max_wait_ms", 1.0)
+    kw.setdefault("registry", MetricRegistry())
+    return ReplicaSet(index, kw.pop("n_replicas", 2), **kw)
+
+
+def test_replicaset_serves_bitwise_and_spreads_load(index):
+    rs = _rset(index)
+    tr = make_trace("uniform", index.n, 192, rate_qps=50_000.0, seed=4)
+    got = rs.serve_trace(tr)
+    want = np.asarray(index.query(tr.s, tr.t), np.float32)
+    fin = np.isfinite(want)
+    assert (np.isfinite(got) == fin).all()
+    np.testing.assert_array_equal(got[fin], want[fin])
+    per = [srv.metrics.served for srv in rs.replicas]
+    assert sum(per) == len(tr) and min(per) > 0     # both took traffic
+    st = rs.stats()
+    assert st["served"] == len(tr)
+    assert all(r["healthy"] for r in st["replicas"].values())
+    assert st["fleet_stragglers"] == []
+    assert rs.registry.get("serve.replica_evictions").total() == 0
+
+
+def test_replicaset_evicts_injected_straggler_and_fires_slo(index):
+    from repro.obs import SLOEngine, default_serving_slos, latency_source
+    rs = _rset(index, evict_after=3)
+    tr = make_trace("straggler", index.n, 256, rate_qps=20_000.0,
+                    seed=5, stall_replica=1, stall_s=5.0)
+    span = float(tr.span_s)
+    slo = SLOEngine(default_serving_slos(
+        latency_threshold_s=1.0, fast_window_s=max(span, 1e-3),
+        slow_window_s=4 * max(span, 1e-3)), registry=rs.registry)
+    slo.attach("latency", latency_source(1.0, registry=rs.registry,
+                                         servers=rs.server_names))
+    got = rs.serve_trace(tr, slo=slo)
+    want = np.asarray(index.query(tr.s, tr.t), np.float32)
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(got[fin], want[fin])  # exact under fault
+    stalled, clean = rs.replicas[1].name, rs.replicas[0].name
+    assert rs.healthy == [True, False]
+    assert rs.stats()["replicas"][stalled]["healthy"] is False
+    ev = rs.registry.get("serve.replica_evictions")
+    assert ev.value(replica=stalled) == 1 and ev.value(replica=clean) == 0
+    assert rs.registry.get("serve.replica_healthy").value(
+        replica=clean) == 1.0
+    assert "latency" in slo.breach_summary()["fired"]
+
+
+def test_replicaset_clean_replay_is_alert_quiet(index):
+    from repro.obs import SLOEngine, default_serving_slos, latency_source
+    rs = _rset(index)
+    tr = make_trace("uniform", index.n, 192, rate_qps=20_000.0, seed=6)
+    span = float(tr.span_s)
+    slo = SLOEngine(default_serving_slos(
+        latency_threshold_s=1.0, fast_window_s=max(span, 1e-3),
+        slow_window_s=4 * max(span, 1e-3)), registry=rs.registry)
+    slo.attach("latency", latency_source(1.0, registry=rs.registry,
+                                         servers=rs.server_names))
+    rs.serve_trace(tr, slo=slo)
+    assert slo.breach_summary()["fired"] == []
+    assert rs.healthy == [True, True]
+    assert rs.stats()["fleet_stragglers"] == []
