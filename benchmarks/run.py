@@ -7,7 +7,10 @@ A suite that raises (including an exactness-gate AssertionError, e.g.
 ``bench_shard``'s bitwise gate or ``bench_path``'s path validation)
 is reported as an ERROR row and the driver exits nonzero — CI's
 ``bench-smoke`` job relies on this to fail on any gate violation while
-still uploading every ``BENCH_*.json`` produced.
+still uploading every ``BENCH_*.json`` produced. A suite that returns
+without emitting a single row is treated the same way (EmptySuite):
+a silently-empty ``BENCH_*.json`` would make the downstream
+``bench-gate`` regression check vacuously green.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only tableX]
 """
@@ -49,11 +52,16 @@ def main() -> int:
     for name, fn in suites.items():
         if args.only and args.only not in name:
             continue
+        before = len(common._ROWS)
         try:
             fn(full=args.full)
         except Exception as e:
             print(f"{name},ERROR,0,{type(e).__name__}:{e}")
             traceback.print_exc()
+            failed.append(name)
+            continue
+        if len(common._ROWS) == before:
+            print(f"{name},ERROR,0,EmptySuite:suite emitted zero rows")
             failed.append(name)
     for path in common.flush_rows(args.out):
         print(f"# wrote {path}")

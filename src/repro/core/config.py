@@ -28,6 +28,9 @@ class IndexConfig:
                                  # interpret | reference (kernels/backend.py)
     query_chunk: int = 0       # >0: tile query batches so the stage-2
                                # frontier is [chunk, n_core+1], not [Q, ...]
+    label_dtype: str = "fp32"  # label storage codec (core/labels.py):
+                               # fp32 | compressed (delta16, raise if
+                               # unfit) | auto (compress when possible)
     seed: int = 0
 
     def e_cap(self, n_edges: int) -> int:

@@ -12,14 +12,28 @@ stages of Algorithm 1 route through here:
   stage 2 — label-seeded bidirectional core relaxation:
       ``CoreRelaxer`` — reference backend keeps the COO scatter-min
       wavefront (``core_relax``, bit-identical to the pre-dispatch
-      engine); pallas/interpret backends run the ``spmv_relax`` ELL
-      min-plus kernel with both frontiers *stacked* into one [2Q, V]
-      launch so each round is a single kernel invocation.
+      engine); kernel backends pick one of three routes at dispatch
+      time (``CoreRelaxer.mode``, see docs/KERNELS.md):
 
-Every backend computes the same per-round fixed point (synchronous
+      "fused"    — the default: one ``fused_relax_kernel`` launch runs
+                   ALL rounds with both stacked frontiers resident in
+                   VMEM and the fixed-point exit inside the kernel.
+      "dense"    — small dense cores (density >= ISLABEL_DENSE_THRESHOLD
+                   and n_core <= dense_cap) relax via the
+                   ``minplus_matmul`` kernel against a 0-diagonal dense
+                   adjacency: one tropical GEMM per round.
+      "ell_loop" — fallback when the fused working set would blow the
+                   VMEM budget: the legacy one-``spmv_relax``-launch-
+                   per-round ``lax.while_loop``.
+
+Every route computes the same per-round fixed point (synchronous Jacobi
 Bellman-Ford over G_k), so answers agree bitwise: each round takes a min
 over the identical multiset of candidate sums regardless of whether the
-edges are visited scatter-wise (COO) or gather-wise (ELL).
+edges are visited scatter-wise (COO), gather-wise (ELL), or as a dense
+min-plus product (the 0 diagonal supplies the keep-old term; parallel
+edges dedup exactly because fp add is monotone in w). Rows relax
+independently, so per-block fixed points freeze bitwise and
+``max(block rounds) == loop rounds``.
 
 Query chunking lives one level up (``QueryEngine.query``): the batch is
 tiled into fixed-size chunks so a 10k-query batch never materializes a
@@ -29,16 +43,24 @@ frontier memory is ``O(query_chunk * n_core)`` instead of
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.labels import LabelRows
 from repro.kernels.backend import pallas_interpret, resolve_backend
 from repro.kernels.label_intersect import ops as li_ops
-from repro.kernels.spmv_relax.kernel import spmv_relax_kernel
+from repro.kernels.minplus_matmul.kernel import minplus_matmul_kernel
+from repro.kernels.spmv_relax.kernel import (
+    fused_relax_kernel, fused_vmem_bytes, spmv_relax_kernel)
 from repro.kernels.spmv_relax.ops import coo_to_ell
+
+# VMEM budget for the fused kernel's per-grid-step working set; above
+# this the dispatcher falls back to the per-round launch loop.
+FUSED_VMEM_BUDGET = 12 * 2 ** 20
 
 
 @partial(jax.jit, static_argnames=("n_sentinel", "backend"))
@@ -51,6 +73,17 @@ def label_intersect_dispatch(ids_s, d_s, ids_t, d_t, n_sentinel: int,
     with jax.named_scope("islabel.label_intersect"):
         return li_ops.label_intersect(ids_s, d_s, ids_t, d_t, n_sentinel,
                                       backend=backend)
+
+
+@partial(jax.jit, static_argnames=("n_sentinel", "codec", "backend"))
+def label_intersect_rows_dispatch(rows_s: LabelRows, rows_t: LabelRows,
+                                  n_sentinel: int, codec: str,
+                                  backend: str):
+    """Equation 1 μ over gathered ``LabelRows`` in either codec — the
+    compressed path fuses decode into the join kernel."""
+    with jax.named_scope("islabel.label_intersect"):
+        return li_ops.label_intersect_rows(rows_s, rows_t, n_sentinel,
+                                           codec=codec, backend=backend)
 
 
 @partial(jax.jit, static_argnames=("n_core", "max_rounds"))
@@ -117,17 +150,87 @@ def _core_relax_ell(seed_s, seed_t, nbr_ids, nbr_w, mu, n_core: int,
         return jnp.minimum(mu, through_core), ds, dt, rounds
 
 
+@partial(jax.jit,
+         static_argnames=("n_core", "max_rounds", "interpret", "bq"))
+def _core_relax_fused(seed_s, seed_t, nbr_ids, nbr_w, mu, n_core: int,
+                      max_rounds: int, interpret: bool, bq: int):
+    """Fused relaxation: both frontiers stacked, ALL rounds in one
+    ``fused_relax_kernel`` launch with the fixed-point exit in-kernel.
+    Batch rounds = max over per-block rounds (all-pad blocks settle in
+    one round, real blocks freeze bitwise at their own fixed point)."""
+    q, v = seed_s.shape
+    vp = nbr_ids.shape[0]
+    rows = 2 * q
+    rp = -(-rows // bq) * bq
+    d0 = jnp.concatenate([seed_s, seed_t], axis=0)
+    d0 = jnp.pad(d0, ((0, rp - rows), (0, vp - v)), constant_values=jnp.inf)
+
+    with jax.named_scope("islabel.core_relax_fused"):
+        d, blk_rounds = fused_relax_kernel(d0, nbr_ids, nbr_w,
+                                           max_rounds=max_rounds, bq=bq,
+                                           interpret=interpret)
+        rounds = jnp.max(blk_rounds, initial=0).astype(jnp.int32)
+        ds = d[:q, :v]
+        dt = d[q:rows, :v]
+        through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
+        return jnp.minimum(mu, through_core), ds, dt, rounds
+
+
+@partial(jax.jit,
+         static_argnames=("n_core", "max_rounds", "interpret", "bm"))
+def _core_relax_dense(seed_s, seed_t, adj, mu, n_core: int,
+                      max_rounds: int, interpret: bool, bm: int = 8):
+    """Dense-core relaxation: one ``minplus_matmul`` tropical GEMM per
+    round against the 0-diagonal adjacency (the diagonal supplies the
+    keep-old term, so ``minplus(d, adj)`` IS the synchronous round)."""
+    q, v = seed_s.shape
+    vp = adj.shape[0]
+    rows = 2 * q
+    rp = -(-rows // bm) * bm
+    d0 = jnp.concatenate([seed_s, seed_t], axis=0)
+    d0 = jnp.pad(d0, ((0, rp - rows), (0, vp - v)), constant_values=jnp.inf)
+
+    def body(state):
+        d, it, _ = state
+        d2 = minplus_matmul_kernel(d, adj, bm=bm, interpret=interpret)
+        return d2, it + 1, jnp.any(d2 < d)
+
+    def cond(state):
+        _, it, improved = state
+        return improved & (it < max_rounds)
+
+    with jax.named_scope("islabel.core_relax_dense"):
+        d, rounds, _ = jax.lax.while_loop(
+            cond, body, (d0, jnp.int32(0), jnp.bool_(True)))
+        ds = d[:q, :v]
+        dt = d[q:rows, :v]
+        through_core = jnp.min(ds[:, :n_core] + dt[:, :n_core], axis=1)
+        return jnp.minimum(mu, through_core), ds, dt, rounds
+
+
 class CoreRelaxer:
     """Backend-dispatched stage-2 relaxation over the local core graph.
 
     Holds the COO edge arrays (local indices in [0, n_core), weights)
-    and lazily derives the ELL layout the ``spmv_relax`` kernel consumes
-    — built once per index on first kernel-path query, padded to a
-    lane-aligned vertex count so per-round launches need no reshaping.
+    and lazily derives the kernel-side layouts: the ELL planes the
+    per-round and fused kernels consume, and (for dense cores) the
+    0-diagonal dense adjacency for ``minplus_matmul`` — each built once
+    per index on first kernel-path query, padded to lane-aligned vertex
+    counts so launches need no reshaping.
+
+    Kernel-route selection (``.mode``) happens at dispatch time:
+    density >= ``dense_threshold`` (env ``ISLABEL_DENSE_THRESHOLD``)
+    with n_core <= ``dense_cap`` -> "dense"; else "fused" when the fused
+    working set fits the VMEM budget; else "ell_loop". Set env
+    ``ISLABEL_FUSED_RELAX=0`` to force the legacy per-round loop.
     """
 
     def __init__(self, ce_src, ce_dst, ce_w, n_core: int, *,
-                 bq: int = 8, bv: int = 128, d_width: int = 16):
+                 bq: int = 8, bv: int = 128, d_width: int = 16,
+                 fused: bool | None = None,
+                 dense_threshold: float | None = None,
+                 dense_cap: int = 2048,
+                 vmem_budget: int = FUSED_VMEM_BUDGET):
         self.ce_src = ce_src
         self.ce_dst = ce_dst
         self.ce_w = ce_w
@@ -135,7 +238,60 @@ class CoreRelaxer:
         self.bq = bq
         self.bv = bv
         self.d_width = d_width
+        if fused is None:
+            fused = os.environ.get("ISLABEL_FUSED_RELAX", "1") != "0"
+        self.fused = fused
+        if dense_threshold is None:
+            dense_threshold = float(
+                os.environ.get("ISLABEL_DENSE_THRESHOLD", "0.05"))
+        self.dense_threshold = dense_threshold
+        self.dense_cap = dense_cap
+        self.vmem_budget = vmem_budget
+        self.density = (len(ce_src) / (n_core * n_core)) if n_core else 0.0
         self._ell = None
+        self._adj = None
+        self._mode = None
+
+    @property
+    def mode(self) -> str:
+        """Kernel route: "dense" | "fused" | "ell_loop" (reference
+        backend bypasses this entirely)."""
+        if self._mode is None:
+            if (0 < self.n_core <= self.dense_cap
+                    and self.density >= self.dense_threshold):
+                self._mode = "dense"
+            elif self.fused:
+                nbr_ids, _ = self.ell()
+                vp, width = nbr_ids.shape
+                fits = fused_vmem_bytes(vp, width, self.bq) \
+                    <= self.vmem_budget
+                self._mode = "fused" if fits else "ell_loop"
+            else:
+                self._mode = "ell_loop"
+        return self._mode
+
+    def dense_adj(self):
+        """[Vp, Vp] float32 dense adjacency: adj[src, dst] = min edge
+        weight (parallel edges dedup exactly — fp add is monotone in w),
+        +inf elsewhere, diagonal min'd with 0 on ALL rows including the
+        sentinel and lane padding so parked values survive each round."""
+        if self._adj is None:
+            v = self.n_core + 1
+            vp = -(-v // self.bv) * self.bv
+            adj = np.full((vp, vp), np.inf, np.float32)
+            src = np.asarray(self.ce_src)
+            dst = np.asarray(self.ce_dst)
+            if len(src):
+                np.minimum.at(adj, (src, dst),
+                              np.asarray(self.ce_w, np.float32))
+            idx = np.arange(vp)
+            adj[idx, idx] = np.minimum(adj[idx, idx], 0.0)
+            # lazily built, possibly first reached inside a jit /
+            # shard_map trace — keep the cached array a concrete device
+            # constant, never a tracer
+            with jax.ensure_compile_time_eval():
+                self._adj = jnp.asarray(adj)
+        return self._adj
 
     def ell(self):
         """(nbr_ids [Vp, D], nbr_w [Vp, D]) with Vp = n_core+1 rounded up
@@ -144,12 +300,14 @@ class CoreRelaxer:
         if self._ell is None:
             v = self.n_core + 1
             vp = -(-v // self.bv) * self.bv
-            ids, ws = coo_to_ell(v, np.asarray(self.ce_src),
-                                 np.asarray(self.ce_dst),
-                                 np.asarray(self.ce_w),
-                                 d_width=self.d_width)
-            ids = jnp.pad(ids, ((0, vp - v), (0, 0)))
-            ws = jnp.pad(ws, ((0, vp - v), (0, 0)), constant_values=jnp.inf)
+            with jax.ensure_compile_time_eval():
+                ids, ws = coo_to_ell(v, np.asarray(self.ce_src),
+                                     np.asarray(self.ce_dst),
+                                     np.asarray(self.ce_w),
+                                     d_width=self.d_width)
+                ids = jnp.pad(ids, ((0, vp - v), (0, 0)))
+                ws = jnp.pad(ws, ((0, vp - v), (0, 0)),
+                             constant_values=jnp.inf)
             self._ell = (ids, ws)
         return self._ell
 
@@ -160,8 +318,17 @@ class CoreRelaxer:
         if backend == "reference":
             return core_relax(seed_s, seed_t, self.ce_src, self.ce_dst,
                               self.ce_w, mu, self.n_core, max_rounds)
+        interpret = pallas_interpret(backend)
+        mode = self.mode
+        if mode == "dense":
+            return _core_relax_dense(seed_s, seed_t, self.dense_adj(), mu,
+                                     self.n_core, max_rounds, interpret,
+                                     self.bq)
         nbr_ids, nbr_w = self.ell()
-        ans, ds, dt, rounds = _core_relax_ell(
+        if mode == "fused":
+            return _core_relax_fused(seed_s, seed_t, nbr_ids, nbr_w, mu,
+                                     self.n_core, max_rounds, interpret,
+                                     self.bq)
+        return _core_relax_ell(
             seed_s, seed_t, nbr_ids, nbr_w, mu, self.n_core, max_rounds,
-            pallas_interpret(backend), self.bq, self.bv)
-        return ans, ds, dt, rounds
+            interpret, self.bq, self.bv)

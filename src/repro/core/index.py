@@ -80,7 +80,8 @@ class ISLabelIndex:
             (jnp.asarray(ce_src), jnp.asarray(ce_dst),
              jnp.asarray(hier.core_w, jnp.float32)),
             n=n, n_core=n_core, max_rounds=cfg.max_relax_rounds,
-            backend=cfg.query_backend, query_chunk=cfg.query_chunk)
+            backend=cfg.query_backend, query_chunk=cfg.query_chunk,
+            label_dtype=cfg.label_dtype)
         ids_h = np.asarray(lbl_ids)
         entries = int((ids_h[:n] < n).sum())
         stats = BuildStats(
@@ -302,7 +303,8 @@ class ISLabelIndex:
              jnp.asarray(core_pos[self.core_dst]),
              jnp.asarray(self.core_w, jnp.float32)),
             n=self.n, n_core=n_core, max_rounds=self.cfg.max_relax_rounds,
-            backend=self.cfg.query_backend, query_chunk=self.cfg.query_chunk)
+            backend=self.cfg.query_backend, query_chunk=self.cfg.query_chunk,
+            label_dtype=self.cfg.label_dtype)
 
     # ------------------------------------------------------------------ io
     def save(self, path):

@@ -31,7 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dispatch import (CoreRelaxer, core_relax,
-                                 label_intersect_dispatch)
+                                 label_intersect_rows_dispatch)
+from repro.core.labels import (LabelRows, decode_rows, encode_labels,
+                               try_encode_labels)
 from repro.kernels.backend import resolve_backend
 
 __all__ = ["QueryEngine", "label_intersect_mu", "core_relax"]
@@ -64,11 +66,17 @@ class QueryEngine:
     ``backend`` selects the kernel execution path ("auto" resolves to
     Pallas on TPU, jnp reference elsewhere; see ``repro.kernels.backend``).
     ``query_chunk`` > 0 tiles query batches into fixed-size chunks.
+    ``label_dtype`` ("fp32" | "compressed" | "auto") selects the label
+    storage codec (``repro.core.labels``): "compressed" encodes delta16
+    ids (+ int32 distances when integral) and raises if the planes don't
+    fit; "auto" compresses when possible and silently keeps fp32
+    otherwise. Serving gathers the compressed planes directly; decode is
+    fused into the intersect kernel and the stage-2 seed scatter.
     """
 
     def __init__(self, lbl_ids, lbl_d, core_pos, core_local_edges, n: int,
                  n_core: int, max_rounds: int = 0, backend: str = "auto",
-                 query_chunk: int = 0):
+                 query_chunk: int = 0, label_dtype: str = "fp32"):
         self.lbl_ids = lbl_ids
         self.lbl_d = lbl_d
         self.core_pos = core_pos              # int32[n+1] -> [0..n_core]
@@ -79,11 +87,33 @@ class QueryEngine:
         self.max_rounds = max_rounds if max_rounds > 0 else max(n_core, 1)
         self.backend = backend
         self.query_chunk = query_chunk
+        if label_dtype not in ("fp32", "compressed", "auto"):
+            raise ValueError(f"unknown label_dtype {label_dtype!r}")
+        self.label_dtype = label_dtype
+        self.codec = "none"
+        self.enc_ids, self.enc_base, self.enc_d = lbl_ids, None, lbl_d
+        if label_dtype != "fp32":
+            encode = (encode_labels if label_dtype == "compressed"
+                      else try_encode_labels)
+            enc = encode(np.asarray(lbl_ids), np.asarray(lbl_d), n)
+            if enc is not None:
+                delta, base, denc = enc
+                self.codec = "delta16"
+                self.enc_ids = jnp.asarray(delta)
+                self.enc_base = jnp.asarray(base)
+                self.enc_d = jnp.asarray(denc)
         self.relaxer = CoreRelaxer(self.ce_src, self.ce_dst, self.ce_w,
                                    n_core) if n_core > 0 else None
         self._last_rounds = 0
         self._batch_fns: dict = {}     # backend -> jitted serving callable
         self._mu_batch_fns: dict = {}
+
+    def _rows(self, idx) -> LabelRows:
+        """Gather label rows for a vertex batch in the active codec."""
+        if self.codec == "none":
+            return LabelRows(self.lbl_ids[idx], None, self.lbl_d[idx])
+        return LabelRows(self.enc_ids[idx], self.enc_base[idx],
+                         self.enc_d[idx])
 
     def _seed(self, ids, d):
         q = ids.shape[0]
@@ -97,11 +127,13 @@ class QueryEngine:
         rounds) with rounds a device scalar (None when there is no
         core) — callers reduce it lazily so chunked batches never sync
         to host between launches."""
-        ids_s, d_s = self.lbl_ids[s], self.lbl_d[s]
-        ids_t, d_t = self.lbl_ids[t], self.lbl_d[t]
-        mu = label_intersect_dispatch(ids_s, d_s, ids_t, d_t, self.n, backend)
+        rows_s, rows_t = self._rows(s), self._rows(t)
+        mu = label_intersect_rows_dispatch(rows_s, rows_t, self.n,
+                                           self.codec, backend)
         if self.n_core == 0:
             return mu, None
+        ids_s, d_s = decode_rows(rows_s, self.n, self.codec)
+        ids_t, d_t = decode_rows(rows_t, self.n, self.codec)
         seed_s = self._seed(ids_s, d_s)
         seed_t = self._seed(ids_t, d_t)
         ans, _, _, rounds = self.relaxer.run(seed_s, seed_t, mu,
@@ -140,9 +172,8 @@ class QueryEngine:
         s = jnp.asarray(s, jnp.int32)
         t = jnp.asarray(t, jnp.int32)
         backend = resolve_backend(self.backend if backend is None else backend)
-        return label_intersect_dispatch(self.lbl_ids[s], self.lbl_d[s],
-                                        self.lbl_ids[t], self.lbl_d[t],
-                                        self.n, backend)
+        return label_intersect_rows_dispatch(self._rows(s), self._rows(t),
+                                             self.n, self.codec, backend)
 
     def classify(self, s, t, level, k):
         """Paper Table 5 endpoint classes: 1 = both core, 2 = one core,
@@ -182,9 +213,9 @@ class QueryEngine:
         backend = resolve_backend(self.backend if backend is None else backend)
         if backend not in self._mu_batch_fns:
             def run(s, t):
-                return label_intersect_dispatch(
-                    self.lbl_ids[s], self.lbl_d[s],
-                    self.lbl_ids[t], self.lbl_d[t], self.n, backend)
+                return label_intersect_rows_dispatch(
+                    self._rows(s), self._rows(t), self.n, self.codec,
+                    backend)
             self._mu_batch_fns[backend] = jax.jit(run)
         return self._mu_batch_fns[backend]
 

@@ -7,6 +7,13 @@ merge is branch-heavy; on TPU we do a *tiled equality join*: compare a
 d_s+d_t where ids match. O(L^2/lane_width) fully-vectorized VPU work
 beats a data-dependent merge on this hardware.
 
+``label_intersect_packed_kernel`` is the same join over *compressed*
+label rows (``repro.core.labels`` delta16 codec): int16 delta planes +
+int32 row bases (+ int32 distances when weights are integral) stream in
+at 2–4 bytes per entry instead of 8, and the decode — a cumsum over the
+row axis — happens in-register before the join. Serving reads the
+compressed blocks directly; nothing materializes the fp32 planes in HBM.
+
 VMEM per block: 4 x [bq, L] operands + [bq, L, 128] intermediate
 (bq=8, L=512 -> ~2 MB), well inside VMEM.
 """
@@ -18,17 +25,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.labels import decode_d, decode_ids
 
-def _intersect_kernel(ids_s_ref, d_s_ref, ids_t_ref, d_t_ref, mu_ref, *,
-                      n_sentinel, chunk):
-    ids_s = ids_s_ref[...]          # [bq, L] int32, sorted, pad = n_sentinel
-    d_s = d_s_ref[...]
-    ids_t = ids_t_ref[...]
-    d_t = d_t_ref[...]
+
+def _equality_join(ids_s, d_s, ids_t, d_t, *, n_sentinel, chunk):
+    """μ over one [bq, L] tile pair — shared by both kernel variants."""
     l = ids_s.shape[1]
 
     def body(c, mu):
-        sl = slice(None)
         it = jax.lax.dynamic_slice(ids_t, (0, c * chunk),
                                    (ids_t.shape[0], chunk))   # [bq, ck]
         dt = jax.lax.dynamic_slice(d_t, (0, c * chunk),
@@ -38,9 +42,16 @@ def _intersect_kernel(ids_s_ref, d_s_ref, ids_t_ref, d_t_ref, mu_ref, *,
         tot = jnp.where(eq, d_s[:, :, None] + dt[:, None, :], jnp.inf)
         return jnp.minimum(mu, jnp.min(tot, axis=(1, 2)))
 
-    mu = jax.lax.fori_loop(0, l // chunk, body,
-                           jnp.full((ids_s.shape[0],), jnp.inf, jnp.float32))
-    mu_ref[...] = mu
+    return jax.lax.fori_loop(0, l // chunk, body,
+                             jnp.full((ids_s.shape[0],), jnp.inf,
+                                      jnp.float32))
+
+
+def _intersect_kernel(ids_s_ref, d_s_ref, ids_t_ref, d_t_ref, mu_ref, *,
+                      n_sentinel, chunk):
+    mu_ref[...] = _equality_join(ids_s_ref[...], d_s_ref[...],
+                                 ids_t_ref[...], d_t_ref[...],
+                                 n_sentinel=n_sentinel, chunk=chunk)
 
 
 @functools.partial(jax.jit,
@@ -67,3 +78,40 @@ def label_intersect_kernel(ids_s, d_s, ids_t, d_t, *, n_sentinel: int,
         out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
         interpret=interpret,
     )(ids_s, d_s, ids_t, d_t)
+
+
+def _intersect_packed_kernel(delta_s_ref, base_s_ref, d_s_ref,
+                             delta_t_ref, base_t_ref, d_t_ref, mu_ref, *,
+                             n_sentinel, chunk):
+    ids_s = decode_ids(delta_s_ref[...], base_s_ref[...], n_sentinel)
+    ids_t = decode_ids(delta_t_ref[...], base_t_ref[...], n_sentinel)
+    mu_ref[...] = _equality_join(ids_s, decode_d(d_s_ref[...]),
+                                 ids_t, decode_d(d_t_ref[...]),
+                                 n_sentinel=n_sentinel, chunk=chunk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_sentinel", "bq", "chunk", "interpret"))
+def label_intersect_packed_kernel(delta_s, base_s, d_s, delta_t, base_t,
+                                  d_t, *, n_sentinel: int, bq=16,
+                                  chunk=128, interpret=False):
+    """Compressed-row variant: delta_*: int16[Q, L] (pad marker -1),
+    base_*: int32[Q], d_*: int32 (pad -1 = +inf) or float32[Q, L].
+    Decode is fused before the join — the fp32 planes never exist in
+    HBM. bq defaults to 16: int16 operands tile at (16, 128) on TPU.
+    Returns mu float32[Q]."""
+    q, l = delta_s.shape
+    assert q % bq == 0 and l % chunk == 0
+    kern = functools.partial(_intersect_packed_kernel, n_sentinel=n_sentinel,
+                             chunk=chunk)
+    row_spec = pl.BlockSpec((bq, l), lambda i: (i, 0))
+    base_spec = pl.BlockSpec((bq,), lambda i: (i,))
+    return pl.pallas_call(
+        kern,
+        grid=(q // bq,),
+        in_specs=[row_spec, base_spec, row_spec,
+                  row_spec, base_spec, row_spec],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=interpret,
+    )(delta_s, base_s, d_s, delta_t, base_t, d_t)

@@ -1,18 +1,34 @@
-"""ELL min-plus SpMV Pallas kernel — one wavefront-relaxation round.
+"""ELL min-plus SpMV Pallas kernels — wavefront relaxation rounds.
 
 new_dist[q, v] = min(dist[q, v], min_j dist[q, nbr[v, j]] + w[v, j])
 
 This is the inner loop of the label-seeded core search (paper Alg. 1
 stage 2) for a batch of queries: the core graph G_k in ELL layout
 (fixed-width in-neighbor lists — G_k is degree-bounded after peeling;
-overflow rows are split by the wrapper). The whole per-query distance
-row stays VMEM-resident (G_k is small by construction — the paper's
-central design point) while output vertex tiles stream through the grid.
+overflow rows are split by the wrapper).
+
+Two kernels:
+
+``spmv_relax_kernel`` — ONE round per launch. The whole per-query
+distance row stays VMEM-resident (G_k is small by construction — the
+paper's central design point) while output vertex tiles stream through
+the grid; the round loop lives outside in ``lax.while_loop``
+(`dispatch._core_relax_ell`), re-reading dist from HBM every round.
+
+``fused_relax_kernel`` — ALL rounds in one launch. Each grid step owns
+a [bq, V] block of stacked query frontiers; the block, the ELL planes,
+and the round loop live entirely in VMEM, with the fixed-point early
+exit (``improved & it < max_rounds``) inside the kernel. Per-block
+round counts come out as a second output; their max equals the global
+round count (rows relax independently, so a block at its fixed point
+stays bitwise-frozen through extra rounds elsewhere). Compulsory HBM
+traffic drops from O(rounds · Q·V) to O(Q·V) — see
+benchmarks/roofline_report.py and docs/KERNELS.md.
 
 TPU note: the inner gather is a VMEM-local vector gather (Mosaic
-`dynamic_gather`); on hardware this kernel is gather-bound, which is
+`dynamic_gather`); on hardware these kernels are gather-bound, which is
 still far better than HBM-scatter Bellman-Ford since dist rows never
-leave VMEM between rounds.
+leave VMEM between (fused: during) rounds.
 """
 from __future__ import annotations
 
@@ -55,3 +71,73 @@ def spmv_relax_kernel(dist, nbr_ids, nbr_w, *, bq=8, bv=128, interpret=False):
         out_shape=jax.ShapeDtypeStruct((q, v), jnp.float32),
         interpret=interpret,
     )(dist, dist, nbr_ids, nbr_w)
+
+
+def _fused_kernel(dist_ref, nbr_ref, w_ref, o_ref, rounds_ref, *,
+                  max_rounds):
+    d0 = dist_ref[...]                    # [bq, V] persistent block
+    ids = nbr_ref[...]                    # [V, D] int32 (pad -> col 0)
+    w = w_ref[...]                        # [V, D] float32 (pad -> inf)
+    bq = d0.shape[0]
+    v, dcap = ids.shape
+    flat = ids.reshape(-1)
+
+    # Jacobi rounds: every candidate reads the *previous* round's
+    # distances, exactly like the per-round kernel — that synchronous
+    # semantics is what makes all relaxation paths bitwise-equal.
+    def round_(state):
+        d, it, _ = state
+        gathered = jnp.take(d, flat, axis=1).reshape(bq, v, dcap)
+        cand = jnp.min(gathered + w[None, :, :], axis=2)
+        d2 = jnp.minimum(d, cand)
+        return d2, it + 1, jnp.any(d2 < d)
+
+    def cond(state):
+        _, it, improved = state
+        return improved & (it < max_rounds)
+
+    d, it, _ = jax.lax.while_loop(cond, round_,
+                                  (d0, jnp.int32(0), jnp.bool_(True)))
+    o_ref[...] = d
+    rounds_ref[...] = jnp.full(rounds_ref.shape, it, jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_rounds", "bq", "interpret"))
+def fused_relax_kernel(dist, nbr_ids, nbr_w, *, max_rounds: int, bq=8,
+                       interpret=False):
+    """All relaxation rounds in one launch. dist: [Q, V] f32 seeds
+    (Q % bq == 0); nbr_ids/nbr_w: [V, D] ELL planes. Returns
+    (fixed-point dist [Q, V], per-block rounds int32[Q // bq]) —
+    ``max(rounds)`` is the batch's round count, bitwise-identical to
+    the per-round loop's."""
+    q, v = dist.shape
+    v2, d = nbr_ids.shape
+    assert v == v2 and q % bq == 0
+    kern = functools.partial(_fused_kernel, max_rounds=max_rounds)
+    return pl.pallas_call(
+        kern,
+        grid=(q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, v), lambda i: (i, 0)),
+            pl.BlockSpec((v, d), lambda i: (0, 0)),
+            pl.BlockSpec((v, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, v), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, v), jnp.float32),
+            jax.ShapeDtypeStruct((q // bq,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dist, nbr_ids, nbr_w)
+
+
+def fused_vmem_bytes(v: int, d_width: int, bq: int = 8) -> int:
+    """Working-set estimate for one fused-kernel grid step: the [bq, V]
+    block (x2 for the carry copy), the ELL planes, and the gather
+    intermediate [bq, V, D]. The dispatch layer falls back to the
+    per-round loop when this exceeds its VMEM budget."""
+    return 4 * (2 * bq * v + 2 * v * d_width + bq * v * d_width)

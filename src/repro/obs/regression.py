@@ -9,8 +9,11 @@ baseline of the same table and classifies every shared metric:
                     gated at the *timing* tolerance (CI passes a loose
                     one; see .github/workflows/ci.yml).
   behavior metrics  (``cache_hit_rate``, ``batch_fill_ratio``, lane
-                    request counts) — deterministic given the same
-                    trace/preset, gated at the tight *behavior*
+                    request counts, plus any derived row field whose key
+                    names a correctness/behavior quantity — exactness
+                    flags, parity bits, fill ratios, relaxation round
+                    counts, overflow counts) — deterministic given the
+                    same trace/preset, gated at the tight *behavior*
                     tolerance: a drift here is a real serving-logic
                     regression, not noise.
 
@@ -69,16 +72,43 @@ class Regression:
                 f"(x{self.ratio:.2f}, tolerance ±{self.tolerance:.0%})")
 
 
+# Derived row keys matching these fragments are deterministic behavior
+# metrics (same code + preset => same value): exactness/parity flags and
+# fill ratios must not drop; round counts and overflow counts must not
+# grow. Everything else in a row stays timing-or-ignored.
+BEHAVIOR_KEY_FRAGMENTS = (
+    ("exact", True), ("parity", True), ("bitwise", True), ("fill", True),
+    ("hit", True), ("rounds", False), ("overflow", False),
+)
+
+
+def _behavior_direction(key: str) -> bool | None:
+    """higher_better for a behavior-classified row key, None otherwise."""
+    k = key.lower()
+    for frag, higher_better in BEHAVIOR_KEY_FRAGMENTS:
+        if frag in k:
+            return higher_better
+    return None
+
+
 def _row_metrics(doc: dict) -> list[Metric]:
     out = []
     for r in doc.get("rows", []):
         name, us = r.get("name"), r.get("us_per_call")
         if name is None or us is None or name == "ERROR":
             continue
-        if float(us) <= TIMING_FLOOR_US:
-            continue
-        out.append(Metric(f"row:{name}:us_per_call", float(us),
-                          higher_better=False, kind="timing"))
+        if float(us) > TIMING_FLOOR_US:
+            out.append(Metric(f"row:{name}:us_per_call", float(us),
+                              higher_better=False, kind="timing"))
+        for key, val in r.items():
+            if key in ("table", "name", "us_per_call"):
+                continue
+            if not isinstance(val, (int, float)) or isinstance(val, bool):
+                continue
+            hb = _behavior_direction(key)
+            if hb is not None:
+                out.append(Metric(f"row:{name}:{key}", float(val),
+                                  higher_better=hb, kind="behavior"))
     return out
 
 

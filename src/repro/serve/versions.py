@@ -53,11 +53,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dispatch import (_core_relax_ell, core_relax,
-                                 label_intersect_dispatch)
+from repro.core.dispatch import (FUSED_VMEM_BUDGET, _core_relax_ell,
+                                 _core_relax_fused, core_relax,
+                                 label_intersect_rows_dispatch)
 from repro.core.index import (ISLabelIndex, apply_delete_host,
                               apply_insert_host)
+from repro.core.labels import (LabelCompressionError, LabelRows,
+                               decode_rows, encode_labels)
 from repro.kernels.backend import pallas_interpret, resolve_backend
+from repro.kernels.spmv_relax.kernel import fused_vmem_bytes
 from repro.kernels.spmv_relax.ops import ell_layout
 
 __all__ = [
@@ -84,7 +88,13 @@ class VersionState(NamedTuple):
     """The traced-argument pytree a jitted family entry point consumes.
 
     All leaves are device arrays with family-fixed shapes:
-      lbl_ids/lbl_d   [n+1, l_cap]      label planes
+      lbl_ids/lbl_d   [n+1, l_cap]      label planes — in a compressed
+                      family these hold the *encoded* planes (int16
+                      deltas / int32 distances, core/labels.py)
+      lbl_base        [n+1]             delta16 row bases; None in an
+                      uncompressed family (a None leaf is an empty
+                      pytree subtree, so the treedef stays fixed per
+                      family and COW swaps never recompile)
       core_slot       [n+1]             vertex -> core slot (core_cap = none)
       ce_src/ce_dst   [edge_cap]        COO slot edges, sentinel-padded
       ce_w            [edge_cap]        weights, +inf padding
@@ -98,6 +108,7 @@ class VersionState(NamedTuple):
     ce_w: jnp.ndarray
     nbr_ids: jnp.ndarray
     nbr_w: jnp.ndarray
+    lbl_base: jnp.ndarray | None = None
 
 
 class VersionFamily:
@@ -111,7 +122,8 @@ class VersionFamily:
     """
 
     def __init__(self, n: int, core_cap: int, edge_cap: int,
-                 ell_width: int, *, bq: int = 8, bv: int = 128):
+                 ell_width: int, *, bq: int = 8, bv: int = 128,
+                 codec: str = "none", d_dtype: str | None = None):
         if core_cap < 1:
             raise ValueError("core_cap must be >= 1")
         self.n = n
@@ -122,20 +134,34 @@ class VersionFamily:
         self.bv = bv
         self.vp = -(-(core_cap + 1) // bv) * bv
         self.max_rounds = core_cap          # while_loop exits at fixpoint
+        # label codec pin: every version of the family must encode the
+        # same way or the state dtypes (and the compiled fns) would move
+        self.codec = codec
+        self.d_dtype = d_dtype
+        # fused single-launch relaxation unless the family's pinned ELL
+        # working set exceeds the VMEM budget (then per-round launches)
+        self.relax_mode = ("fused" if fused_vmem_bytes(
+            self.vp, ell_width, bq) <= FUSED_VMEM_BUDGET else "ell_loop")
         self._mu_fns: dict = {}
         self._full_fns: dict = {}
+
+    def _rows(self, state: VersionState, idx) -> LabelRows:
+        if self.codec == "none":
+            return LabelRows(state.lbl_ids[idx], None, state.lbl_d[idx])
+        return LabelRows(state.lbl_ids[idx], state.lbl_base[idx],
+                         state.lbl_d[idx])
 
     # ------------------------------------------------------- entry points
     def mu_fn(self, backend: str | None = None):
         """Jitted ``run(state, s, t) -> mu float32[Q]`` (Equation 1)."""
         backend = resolve_backend(backend)
         if backend not in self._mu_fns:
-            n = self.n
+            n, codec = self.n, self.codec
 
             def run(state, s, t):
-                return label_intersect_dispatch(
-                    state.lbl_ids[s], state.lbl_d[s],
-                    state.lbl_ids[t], state.lbl_d[t], n, backend)
+                return label_intersect_rows_dispatch(
+                    self._rows(state, s), self._rows(state, t), n, codec,
+                    backend)
 
             self._mu_fns[backend] = jax.jit(run)
         return self._mu_fns[backend]
@@ -145,7 +171,7 @@ class VersionFamily:
         — both stages of Algorithm 1 over the family shapes."""
         backend = resolve_backend(backend)
         if backend not in self._full_fns:
-            n, cap = self.n, self.core_cap
+            n, cap, codec = self.n, self.core_cap, self.codec
             max_rounds, bq, bv = self.max_rounds, self.bq, self.bv
             interp = False if backend == "reference" \
                 else pallas_interpret(backend)
@@ -159,16 +185,22 @@ class VersionFamily:
                     jnp.where(ids < n, d, jnp.inf))
 
             def run(state, s, t):
-                ids_s, d_s = state.lbl_ids[s], state.lbl_d[s]
-                ids_t, d_t = state.lbl_ids[t], state.lbl_d[t]
-                mu = label_intersect_dispatch(ids_s, d_s, ids_t, d_t, n,
-                                              backend)
+                rows_s = self._rows(state, s)
+                rows_t = self._rows(state, t)
+                mu = label_intersect_rows_dispatch(rows_s, rows_t, n,
+                                                   codec, backend)
+                ids_s, d_s = decode_rows(rows_s, n, codec)
+                ids_t, d_t = decode_rows(rows_t, n, codec)
                 seed_s = seed(state, ids_s, d_s)
                 seed_t = seed(state, ids_t, d_t)
                 if backend == "reference":
                     ans, _, _, rounds = core_relax(
                         seed_s, seed_t, state.ce_src, state.ce_dst,
                         state.ce_w, mu, cap, max_rounds)
+                elif self.relax_mode == "fused":
+                    ans, _, _, rounds = _core_relax_fused(
+                        seed_s, seed_t, state.nbr_ids, state.nbr_w, mu,
+                        cap, max_rounds, interp, bq)
                 else:
                     ans, _, _, rounds = _core_relax_ell(
                         seed_s, seed_t, state.nbr_ids, state.nbr_w, mu,
@@ -366,7 +398,16 @@ class VersionManager:
         slot[index.core_ids] = np.arange(n_core0, dtype=np.int32)
         _, _, _, base_w = ell_layout(core_cap + 1, slot[index.core_dst])
         ell_width = -(-(base_w + ell_headroom) // 16) * 16
-        family = VersionFamily(index.n, core_cap, edge_cap, ell_width)
+        # the family pins the index's label codec: compressed versions
+        # flow through COW swaps with the same state dtypes/treedef
+        eng = index.engine
+        codec = eng.codec
+        d_dtype = None
+        if codec != "none":
+            d_dtype = ("int32" if eng.enc_d.dtype == jnp.int32
+                       else "float32")
+        family = VersionFamily(index.n, core_cap, edge_cap, ell_width,
+                               codec=codec, d_dtype=d_dtype)
         store = LabelBlockStore.from_arrays(
             np.asarray(index.lbl_ids), np.asarray(index.lbl_d),
             np.asarray(index.lbl_pred), block_rows=block_rows)
@@ -376,12 +417,12 @@ class VersionManager:
             touched_rows=np.zeros(0, np.int64)), strict=strict)
         mgr._core_slot = slot
         mgr._next_slot = n_core0
-        mgr.current.state = mgr._build_state(index.lbl_ids, index.lbl_d,
-                                             index, slot)
+        mgr.current.state = mgr._build_state(
+            eng.enc_ids, eng.enc_d, index, slot, lbl_base=eng.enc_base)
         return mgr
 
-    def _build_state(self, lbl_ids_dev, lbl_d_dev, index,
-                     slot) -> VersionState:
+    def _build_state(self, lbl_ids_dev, lbl_d_dev, index, slot,
+                     lbl_base=None) -> VersionState:
         src_slots = slot[index.core_src]
         dst_slots = slot[index.core_dst]
         ce_src, ce_dst, ce_w = self.family.pad_coo(src_slots, dst_slots,
@@ -389,7 +430,7 @@ class VersionManager:
         nbr_ids, nbr_w = self.family.build_ell(src_slots, dst_slots,
                                                index.core_w)
         return VersionState(
-            lbl_ids=lbl_ids_dev, lbl_d=lbl_d_dev,
+            lbl_ids=lbl_ids_dev, lbl_d=lbl_d_dev, lbl_base=lbl_base,
             core_slot=jnp.asarray(slot),
             ce_src=jnp.asarray(ce_src), ce_dst=jnp.asarray(ce_dst),
             ce_w=jnp.asarray(ce_w), nbr_ids=nbr_ids, nbr_w=nbr_w)
@@ -450,7 +491,13 @@ class VersionManager:
             cur, ids_h, d_h, pred_h, rows)
         clone._install_labels(lbl_ids_dev, lbl_d_dev, lbl_pred_dev,
                               host=(ids_h, d_h, pred_h))
-        state = self._build_state(lbl_ids_dev, lbl_d_dev, clone, slot)
+        if self.family.codec == "none":
+            state = self._build_state(lbl_ids_dev, lbl_d_dev, clone, slot)
+        else:
+            enc_ids, enc_base, enc_d = self._scatter_state_rows(
+                cur, ids_h, d_h, rows)
+            state = self._build_state(enc_ids, enc_d, clone, slot,
+                                      lbl_base=enc_base)
         version = IndexVersion(
             vid=self._next_vid, index=clone, state=state,
             store=cur.store.commit(ids_h, d_h, pred_h, rows),
@@ -478,14 +525,41 @@ class VersionManager:
         indices are deterministic) to bound the compile-shape count of
         this off-hot-path scatter."""
         if rows.size == 0:
-            return cur.state.lbl_ids, cur.state.lbl_d, cur.index.lbl_pred
+            return cur.index.lbl_ids, cur.index.lbl_d, cur.index.lbl_pred
         pad = 1 << (int(rows.size) - 1).bit_length()
         r = np.concatenate([rows, np.full(pad - rows.size, rows[0],
                                           np.int64)])
         rj = jnp.asarray(r, jnp.int32)
-        return (cur.state.lbl_ids.at[rj].set(jnp.asarray(ids_h[r])),
-                cur.state.lbl_d.at[rj].set(jnp.asarray(d_h[r])),
+        return (cur.index.lbl_ids.at[rj].set(jnp.asarray(ids_h[r])),
+                cur.index.lbl_d.at[rj].set(jnp.asarray(d_h[r])),
                 cur.index.lbl_pred.at[rj].set(jnp.asarray(pred_h[r])))
+
+    def _scatter_state_rows(self, cur, ids_h, d_h, rows):
+        """Compressed-family twin of ``_scatter_rows``: re-encode the
+        touched rows (delta16 is row-local, so per-row re-encode under
+        the family's pinned distance dtype is exact) and scatter them
+        into the parent's encoded planes — same power-of-two row
+        padding, same new-arrays-parent-stays-valid contract. A row
+        that no longer fits the codec is a capacity failure, mirroring
+        ELL-width overflow."""
+        st = cur.state
+        if rows.size == 0:
+            return st.lbl_ids, st.lbl_base, st.lbl_d
+        pad = 1 << (int(rows.size) - 1).bit_length()
+        r = np.concatenate([rows, np.full(pad - rows.size, rows[0],
+                                          np.int64)])
+        try:
+            delta, base, d_enc = encode_labels(
+                ids_h[r], d_h[r], self.family.n,
+                d_dtype=self.family.d_dtype)
+        except LabelCompressionError as e:
+            raise FamilyCapacityError(
+                f"mutated label rows no longer fit the family's delta16 "
+                f"codec ({e}); rebuild the family uncompressed") from e
+        rj = jnp.asarray(r, jnp.int32)
+        return (st.lbl_ids.at[rj].set(jnp.asarray(delta)),
+                st.lbl_base.at[rj].set(jnp.asarray(base)),
+                st.lbl_d.at[rj].set(jnp.asarray(d_enc)))
 
     # ---------------------------------------------------------- lifecycle
     def acquire(self) -> IndexVersion:

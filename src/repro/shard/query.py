@@ -35,7 +35,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.dispatch import CoreRelaxer, label_intersect_dispatch
+from repro.core.dispatch import (CoreRelaxer,
+                                 label_intersect_rows_dispatch)
+from repro.core.labels import LabelRows, decode_rows
 from repro.core.query import QueryEngine
 from repro.kernels.backend import resolve_backend
 from repro.obs.registry import REGISTRY
@@ -49,11 +51,16 @@ class ShardedQueryEngine:
     ``lbl_ids``/``lbl_d``: [P, n+1, cap_s] blocks laid out over the
     mesh's ``shard`` axis (one partition per device slice); core state
     (``core_pos`` and the local-index COO edges) replicated.
+
+    ``enc``/``codec``: compressed label planes (``repro.core.labels``
+    delta16) sharded identically — per-shard blocks encode row-locally,
+    so each shard decodes its own block in-kernel and the pmin'd answer
+    stays bitwise-equal to the unsharded engine.
     """
 
     def __init__(self, lbl_ids, lbl_d, core_pos, core_local_edges, n: int,
                  n_core: int, mesh, max_rounds: int = 0,
-                 backend: str = "auto"):
+                 backend: str = "auto", enc=None, codec: str = "none"):
         self.lbl_ids = lbl_ids
         self.lbl_d = lbl_d
         self.core_pos = core_pos
@@ -66,6 +73,11 @@ class ShardedQueryEngine:
         self.cap = lbl_ids.shape[2]
         self.max_rounds = max_rounds if max_rounds > 0 else max(n_core, 1)
         self.backend = backend
+        self.codec = codec
+        if codec == "none":
+            self.enc_ids, self.enc_base, self.enc_d = lbl_ids, None, lbl_d
+        else:
+            self.enc_ids, self.enc_base, self.enc_d = enc
         self.relaxer = CoreRelaxer(self.ce_src, self.ce_dst, self.ce_w,
                                    n_core) if n_core > 0 else None
         self._batch_fns: dict = {}
@@ -80,19 +92,26 @@ class ShardedQueryEngine:
     # drift between the twins.
     _seed = QueryEngine._seed
 
-    def _shard_block(self, blk_ids, blk_d, s, t, backend: str,
+    def _shard_block(self, blk: LabelRows, s, t, backend: str,
                      mu_only: bool):
-        """Both stages on one shard's block. Runs inside shard_map; the
-        only collective is the final pmin over the shard axis."""
+        """Both stages on one shard's block (``blk``: the shard's label
+        planes in the active codec). Runs inside shard_map; the only
+        collective is the final pmin over the shard axis."""
         with jax.named_scope("islabel.shard_block"):
-            ids_s, d_s = blk_ids[s], blk_d[s]
-            ids_t, d_t = blk_ids[t], blk_d[t]
-            mu = label_intersect_dispatch(ids_s, d_s, ids_t, d_t, self.n,
-                                          backend)
+            rows_s = LabelRows(
+                blk.ids[s], None if blk.base is None else blk.base[s],
+                blk.d[s])
+            rows_t = LabelRows(
+                blk.ids[t], None if blk.base is None else blk.base[t],
+                blk.d[t])
+            mu = label_intersect_rows_dispatch(rows_s, rows_t, self.n,
+                                               self.codec, backend)
             if mu_only:
                 return jax.lax.pmin(mu, self.axis)
             if self.n_core == 0:
                 return jax.lax.pmin(mu, self.axis), jnp.int32(0)
+            ids_s, d_s = decode_rows(rows_s, self.n, self.codec)
+            ids_t, d_t = decode_rows(rows_t, self.n, self.codec)
             seed_s = self._seed(ids_s, d_s)
             seed_t = self._seed(ids_t, d_t)
             ans, _, _, rounds = self.relaxer.run(seed_s, seed_t, mu,
@@ -103,21 +122,41 @@ class ShardedQueryEngine:
         blocks = P(self.axis, None, None)
         out_specs = P() if mu_only else (P(), P())
 
-        def shard_fn(blk_ids, blk_d, s, t):
-            # the per-device block keeps a leading axis of size 1
-            return self._shard_block(blk_ids[0], blk_d[0], s, t,
-                                     backend, mu_only)
-
         # rounds is bitwise-identical across shards (identical seeds in
         # the real columns -> identical relaxation), so out_spec P()
         # with check_rep=False just adopts the replicated value.
-        mapped = shard_map(shard_fn, mesh=self.mesh,
-                           in_specs=(blocks, blocks, P(), P()),
-                           out_specs=out_specs, check_rep=False)
+        if self.codec == "none":
+            def shard_fn(blk_ids, blk_d, s, t):
+                # the per-device block keeps a leading axis of size 1
+                return self._shard_block(
+                    LabelRows(blk_ids[0], None, blk_d[0]), s, t,
+                    backend, mu_only)
 
-        def run(s, t):
-            return mapped(self.lbl_ids, self.lbl_d,
-                          jnp.asarray(s, jnp.int32), jnp.asarray(t, jnp.int32))
+            mapped = shard_map(shard_fn, mesh=self.mesh,
+                               in_specs=(blocks, blocks, P(), P()),
+                               out_specs=out_specs, check_rep=False)
+
+            def run(s, t):
+                return mapped(self.lbl_ids, self.lbl_d,
+                              jnp.asarray(s, jnp.int32),
+                              jnp.asarray(t, jnp.int32))
+        else:
+            base_blocks = P(self.axis, None)
+
+            def shard_fn(blk_ids, blk_base, blk_d, s, t):
+                return self._shard_block(
+                    LabelRows(blk_ids[0], blk_base[0], blk_d[0]), s, t,
+                    backend, mu_only)
+
+            mapped = shard_map(
+                shard_fn, mesh=self.mesh,
+                in_specs=(blocks, base_blocks, blocks, P(), P()),
+                out_specs=out_specs, check_rep=False)
+
+            def run(s, t):
+                return mapped(self.enc_ids, self.enc_base, self.enc_d,
+                              jnp.asarray(s, jnp.int32),
+                              jnp.asarray(t, jnp.int32))
         return self._counted(jax.jit(run), "mu" if mu_only else "full")
 
     def _counted(self, fn, path: str):

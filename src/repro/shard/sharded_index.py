@@ -35,6 +35,11 @@ from repro.shard.query import ShardedQueryEngine
 _AXES_TREE = {
     "lbl_ids": ("label_shard", "vertex", "label_slot"),
     "lbl_d": ("label_shard", "vertex", "label_slot"),
+    # compressed planes (core/labels.py delta16) shard like the planes
+    # they encode; the per-row base drops the slot axis
+    "lbl_delta": ("label_shard", "vertex", "label_slot"),
+    "lbl_base": ("label_shard", "vertex"),
+    "lbl_denc": ("label_shard", "vertex", "label_slot"),
     "core_pos": ("vertex",),
     "ce_src": ("core_edge",),
     "ce_dst": ("core_edge",),
@@ -143,13 +148,29 @@ class ShardedIndex:
             "ce_dst": core_pos[core_dst].astype(np.int32),
             "ce_w": np.asarray(core_w, np.float32),
         }
+        # per-shard blocks keep the [reals..., pads] row layout the
+        # codec requires (partition_labels compacts in source order), so
+        # compressed blocks encode row-locally per shard
+        codec = "none"
+        if cfg.label_dtype != "fp32":
+            from repro.core.labels import encode_labels, try_encode_labels
+            encode = (encode_labels if cfg.label_dtype == "compressed"
+                      else try_encode_labels)
+            enc = encode(blocks.ids, blocks.d, n)
+            if enc is not None:
+                codec = "delta16"
+                host["lbl_delta"], host["lbl_base"], host["lbl_denc"] = enc
         dev = {name: jax.device_put(arr, shardings[name])
                for name, arr in host.items()}
         engine = ShardedQueryEngine(
             dev["lbl_ids"], dev["lbl_d"], dev["core_pos"],
             (dev["ce_src"], dev["ce_dst"], dev["ce_w"]),
             n=n, n_core=len(core_ids), mesh=mesh,
-            max_rounds=cfg.max_relax_rounds, backend=cfg.query_backend)
+            max_rounds=cfg.max_relax_rounds, backend=cfg.query_backend,
+            codec=codec,
+            enc=None if codec == "none" else (dev["lbl_delta"],
+                                              dev["lbl_base"],
+                                              dev["lbl_denc"]))
         return ShardedIndex(
             n=n, k=k, num_shards=num_shards, strategy=strategy,
             replicate_top=replicate_top, cfg=cfg, level=np.asarray(level),

@@ -1,0 +1,116 @@
+"""CI perf-trajectory gates: behavior-metric extraction from bench rows,
+the ``scripts/obs_report.py`` gate policies (--fail-on any|behavior,
+--report-out), and ``benchmarks/run.py``'s empty-suite failure — a
+suite that silently emits zero rows must exit nonzero rather than let
+the downstream bench-gate diff go vacuously green.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.obs.regression import compare_docs, extract_metrics
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _doc(exact=1, rounds=8, us=500.0, fill=0.9):
+    return {"rows": [
+        {"table": "kernels", "name": "fused_relax_kernel[q64,v4096]",
+         "us_per_call": us, "relax_rounds": rounds,
+         "exact_vs_dijkstra": exact, "batch_fill_ratio": fill,
+         "backend": "interpret"},
+        {"table": "kernels", "name": "tiny_row", "us_per_call": 3.0},
+    ]}
+
+
+# ----------------------------------------------- behavior row metrics
+def test_row_behavior_metrics_extracted():
+    m = extract_metrics(_doc())
+    key = "row:fused_relax_kernel[q64,v4096]"
+    assert m[f"{key}:us_per_call"].kind == "timing"
+    assert m[f"{key}:exact_vs_dijkstra"].kind == "behavior"
+    assert m[f"{key}:exact_vs_dijkstra"].higher_better
+    assert m[f"{key}:relax_rounds"].kind == "behavior"
+    assert not m[f"{key}:relax_rounds"].higher_better
+    assert m[f"{key}:batch_fill_ratio"].higher_better
+    # non-behavior derived keys (backend string) are not metrics; rows
+    # under the timing floor contribute no timing metric
+    assert "row:tiny_row:us_per_call" not in m
+
+
+def test_compare_docs_gates_behavior_rows():
+    base = _doc()
+    # timing drift within a loose tolerance: clean
+    assert compare_docs("kernels", base, _doc(us=600.0)) == []
+    # exactness flag dropping is a behavior regression
+    regs = compare_docs("kernels", base, _doc(exact=0))
+    assert [r.kind for r in regs] == ["behavior"]
+    # round-count growth is a behavior regression too
+    regs = compare_docs("kernels", base, _doc(rounds=12))
+    assert any("relax_rounds" in r.metric and r.kind == "behavior"
+               for r in regs)
+
+
+# ------------------------------------------------- obs_report policies
+def _gate(baseline, fresh, *extra):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "obs_report.py"),
+         "--baseline", str(baseline), "--fresh", str(fresh),
+         "--timing-tolerance", "0.5", *extra],
+        capture_output=True, text=True, timeout=120)
+
+
+def _write(d, doc):
+    d.mkdir(exist_ok=True)
+    (d / "BENCH_kernels.json").write_text(json.dumps(doc))
+
+
+def test_obs_report_fail_on_policies(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, _doc())
+
+    # timing-only regression: gates under 'any', warns under 'behavior'
+    _write(fresh, _doc(us=5000.0))
+    assert _gate(base, fresh).returncode == 1
+    r = _gate(base, fresh, "--fail-on", "behavior")
+    assert r.returncode == 0 and "WARN" in r.stdout, r.stdout
+
+    # injected behavior regression (exactness flag drops): gates under
+    # BOTH policies — this is the bench-gate acceptance scenario
+    _write(fresh, _doc(exact=0))
+    assert _gate(base, fresh, "--fail-on", "behavior").returncode == 1
+    assert _gate(base, fresh).returncode == 1
+
+    # clean run passes and --report-out writes the artifact
+    _write(fresh, _doc())
+    report = tmp_path / "out" / "report.txt"
+    r = _gate(base, fresh, "--fail-on", "behavior",
+              "--report-out", str(report))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in report.read_text()
+
+    # required-table coverage loss gates even under --fail-on behavior
+    r = _gate(base, fresh, "--fail-on", "behavior",
+              "--tables", "kernels,serving")
+    assert r.returncode == 1 and "serving" in r.stdout
+
+
+# ------------------------------------------------- run.py empty suites
+def test_run_py_fails_on_empty_suite(tmp_path):
+    """roofline with no kernel rows available (fresh cwd, no
+    BENCH_kernels.json anywhere) emits zero rows -> EmptySuite error
+    row and nonzero exit."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(REPO), str(REPO / "src"), env.get("PYTHONPATH", "")])
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "roofline",
+         "--out", str(tmp_path / "out")],
+        capture_output=True, text=True, timeout=300, env=env,
+        cwd=tmp_path)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "EmptySuite" in r.stdout

@@ -1,0 +1,260 @@
+"""Label compression (``IndexConfig.label_dtype``, core/labels.py) end
+to end: codec roundtrip exactness and rejection modes, compressed
+QueryEngine bitwise vs fp32 across backends and vs the Dijkstra oracle,
+auto-mode fallbacks, sharded compressed serving (subprocess, forced
+2-device CPU), and versioned mutation — compressed blocks must flow
+through COW swaps with zero new compiles on the read path.
+
+delta16 ids + int32 distances are *bitwise*-exact by construction
+(int->fp32 conversion below 2**24 is exact); the assertions here are
+plain array_equal, the strictest version of the ULP gate.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ISLabelIndex, IndexConfig, ref
+from repro.core.labels import (LabelCompressionError, LabelRows,
+                               decode_rows, encode_labels,
+                               try_encode_labels)
+from repro.core.query import QueryEngine
+from repro.graphs import generators as gen
+from repro.serve import MutationOp, VersionManager
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+RNG = np.random.default_rng(17)
+
+
+def _bitwise(got, want, tag=""):
+    got, want = np.asarray(got), np.asarray(want)
+    fin = np.isfinite(want)
+    assert (np.isfinite(got) == fin).all(), tag
+    np.testing.assert_array_equal(got[fin], want[fin], err_msg=tag)
+
+
+# --------------------------------------------------------------- codec
+def _encodable_planes(q=20, l=24, n=4000, integral=True):
+    ids = (RNG.integers(0, 300, (q, 1))
+           + np.cumsum(RNG.integers(1, 40, (q, l)), axis=1)).astype(np.int32)
+    ids[::4, l - 3:] = n
+    ids[3, :] = n                               # fully padded row
+    d = (RNG.integers(0, 90, (q, l)).astype(np.float32) if integral
+         else (RNG.random((q, l)) * 9).astype(np.float32))
+    d = np.where(ids < n, d, np.inf).astype(np.float32)
+    return ids, d, n
+
+
+@pytest.mark.parametrize("integral", [True, False])
+def test_roundtrip_exact(integral):
+    ids, d, n = _encodable_planes(integral=integral)
+    delta, base, d_enc = encode_labels(ids, d, n)
+    assert delta.dtype == np.int16
+    assert d_enc.dtype == (np.int32 if integral else np.float32)
+    got_ids, got_d = decode_rows(
+        LabelRows(jnp.asarray(delta), jnp.asarray(base),
+                  jnp.asarray(d_enc)), n, "delta16")
+    np.testing.assert_array_equal(np.asarray(got_ids), ids)
+    _bitwise(got_d, d)
+
+
+def test_encode_rejections():
+    ids, d, n = _encodable_planes()
+    bad = ids.copy()
+    bad[0, 0], bad[0, 1] = bad[0, 1], bad[0, 0]          # unsorted
+    with pytest.raises(LabelCompressionError):
+        encode_labels(bad, d, n)
+    big = ids.copy().astype(np.int32)
+    big[1, -4] = 3_000_000                               # delta > int16
+    with pytest.raises(LabelCompressionError):
+        encode_labels(big, d, 4_000_000)
+    assert try_encode_labels(big, d, 4_000_000) is None
+    holes = ids.copy()
+    holes[2, 5] = n                                      # pad mid-row
+    if holes[2, 6] < n:
+        with pytest.raises(LabelCompressionError):
+            encode_labels(holes, d, n)
+    frac = d.copy()
+    frac[0, 0] = 1.5
+    with pytest.raises(LabelCompressionError):
+        encode_labels(ids, frac, n, d_dtype="int32")     # pinned codec
+    # pinned float32 always fits and keeps the plane verbatim
+    _, _, d_enc = encode_labels(ids, d, n, d_dtype="float32")
+    assert d_enc.dtype == np.float32
+
+
+# --------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def graph_and_index():
+    n, src, dst, w = gen.er_graph(240, 2.6, seed=9)
+    idx = ISLabelIndex.build(n, src, dst, w,
+                             IndexConfig(l_cap=128, label_chunk=64))
+    s = RNG.integers(0, n, 64).astype(np.int32)
+    t = RNG.integers(0, n, 64).astype(np.int32)
+    want = ref.dijkstra_oracle(n, src, dst, w, s)[np.arange(64), t]
+    return (n, src, dst, w), idx, s, t, want
+
+
+def _compressed_twin(eng, label_dtype="compressed"):
+    return QueryEngine(eng.lbl_ids, eng.lbl_d, eng.core_pos,
+                       (eng.ce_src, eng.ce_dst, eng.ce_w), eng.n,
+                       eng.n_core, label_dtype=label_dtype)
+
+
+@pytest.mark.parametrize("backend", ["reference", "interpret"])
+def test_engine_compressed_bitwise(graph_and_index, backend):
+    """Compressed engine == fp32 engine bitwise (μ-only and full path)
+    and exact vs the Dijkstra oracle, on both backends."""
+    _, idx, s, t, want = graph_and_index
+    ceng = _compressed_twin(idx.engine)
+    assert ceng.codec == "delta16"
+    assert ceng.enc_d.dtype == jnp.int32       # er_graph weights integral
+    _bitwise(ceng.query_mu_only(s, t, backend=backend),
+             idx.engine.query_mu_only(s, t, backend=backend), "mu")
+    got = ceng.query(s, t, backend=backend)
+    _bitwise(got, idx.engine.query(s, t, backend=backend), "full")
+    _bitwise(got, want.astype(np.float32), "oracle")
+
+
+def test_config_plumbs_label_dtype(graph_and_index):
+    (n, src, dst, w), idx, s, t, _ = graph_and_index
+    cidx = ISLabelIndex.build(
+        n, src, dst, w,
+        IndexConfig(l_cap=128, label_chunk=64, label_dtype="compressed"))
+    assert cidx.engine.codec == "delta16"
+    _bitwise(cidx.query(s, t), idx.query(s, t))
+
+
+def test_auto_fallback_modes(graph_and_index):
+    """auto: fractional weights keep a float32 distance plane (ids still
+    delta16); planes that don't fit the id codec fall back to fp32
+    wholesale, while "compressed" raises on them."""
+    (n, src, dst, w), idx, s, t, _ = graph_and_index
+    half = ISLabelIndex.build(
+        n, src, dst, w * np.float32(0.5),
+        IndexConfig(l_cap=128, label_chunk=64, label_dtype="auto"))
+    assert half.engine.codec == "delta16"
+    assert half.engine.enc_d.dtype == jnp.float32
+    _bitwise(half.query(s, t), 0.5 * np.asarray(idx.query(s, t)))
+
+    eng = idx.engine
+    wide_ids = np.asarray(eng.lbl_ids).astype(np.int64)
+    wide_ids[wide_ids < eng.n] *= 40_000       # deltas overflow int16
+    wide_n = int(wide_ids.max()) + 1
+    auto = QueryEngine(jnp.asarray(wide_ids.astype(np.int32)), eng.lbl_d,
+                       eng.core_pos, (eng.ce_src, eng.ce_dst, eng.ce_w),
+                       wide_n, eng.n_core, label_dtype="auto")
+    assert auto.codec == "none"
+    with pytest.raises(LabelCompressionError):
+        QueryEngine(jnp.asarray(wide_ids.astype(np.int32)), eng.lbl_d,
+                    eng.core_pos, (eng.ce_src, eng.ce_dst, eng.ce_w),
+                    wide_n, eng.n_core, label_dtype="compressed")
+    with pytest.raises(ValueError):
+        _compressed_twin(eng, label_dtype="zstd")
+
+
+# -------------------------------------------------------------- sharded
+def test_sharded_compressed_bitwise_subprocess():
+    """Compressed blocks shard row-locally: sharded compressed answers ==
+    unsharded fp32 bitwise on 2 forced CPU devices, one collective."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    code = textwrap.dedent("""
+        import numpy as np
+        from repro.core import ISLabelIndex, IndexConfig
+        from repro.graphs import generators as gen
+        from repro.shard import ShardedIndex
+        n, src, dst, w = gen.er_graph(300, 2.5, seed=9)
+        idx = ISLabelIndex.build(n, src, dst, w,
+                                 IndexConfig(l_cap=128, label_chunk=128))
+        cidx = ISLabelIndex.build(
+            n, src, dst, w,
+            IndexConfig(l_cap=128, label_chunk=128,
+                        label_dtype="compressed"))
+        sidx = ShardedIndex.from_index(cidx, 2)
+        assert sidx.engine.codec == "delta16", sidx.engine.codec
+        r = np.random.default_rng(0)
+        s = r.integers(0, n, 48).astype(np.int32)
+        t = r.integers(0, n, 48).astype(np.int32)
+        for backend in ("reference", "interpret"):
+            want_ans, want_rounds = idx.engine.batch_fn(backend)(s, t)
+            ans, rounds = sidx.engine.batch_fn(backend)(s, t)
+            assert np.array_equal(np.asarray(ans), np.asarray(want_ans))
+            assert int(rounds) == int(want_rounds)
+            mu = sidx.engine.mu_batch_fn(backend)(s, t)
+            assert np.array_equal(
+                np.asarray(mu),
+                np.asarray(idx.engine.mu_batch_fn(backend)(s, t)))
+            assert sidx.engine.collective_count(backend=backend) == 1
+        print("ok")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ok" in r.stdout
+
+
+# ------------------------------------------------------------ versioned
+def test_versioned_compressed_mutation_zero_recompiles():
+    """A compressed family carries encoded planes through COW swaps:
+    answers bitwise-equal an uncompressed family and a from-scratch
+    rebuild, with zero new (entry point, shape) compiles after the
+    first query — mutated versions reuse the same jitted family fns."""
+    n_base, spares = 150, 8
+    n = n_base + spares
+    nb, src, dst, w = gen.er_graph(n_base, 2.4, seed=5)
+    cfg = IndexConfig(l_cap=256, label_chunk=128)
+    idx = ISLabelIndex.build(n, src, dst, w, cfg)
+    cidx = ISLabelIndex.build(
+        n, src, dst, w,
+        IndexConfig(l_cap=256, label_chunk=128, label_dtype="compressed"))
+    mgr = VersionManager.from_index(idx)
+    cmgr = VersionManager.from_index(cidx)
+    assert cmgr.family.codec == "delta16"
+    fn = mgr.family.full_fn("interpret")
+    cfn = cmgr.family.full_fn("interpret")
+
+    r = np.random.default_rng(2)
+    s = r.integers(0, n_base, 32).astype(np.int32)
+    t = r.integers(0, n_base, 32).astype(np.int32)
+    ans0, r0 = fn(mgr.current.state, s, t)
+    cans0, cr0 = cfn(cmgr.current.state, s, t)
+    _bitwise(cans0, ans0, "v0")
+    assert int(cr0) == int(r0)
+    sizes0 = cmgr.family.cache_sizes("interpret")
+
+    core_u = int(idx.core_ids[0])
+    ops = [MutationOp("insert", n_base, (core_u,), (1.0,))]
+    ver = mgr.apply(ops)
+    cver = cmgr.apply(ops)
+    qs = np.concatenate([s[:16], np.full(16, n_base)]).astype(np.int32)
+    qt = np.concatenate([np.full(16, n_base), t[:16]]).astype(np.int32)
+    ans1, r1 = fn(ver.state, qs, qt)
+    cans1, cr1 = cfn(cver.state, qs, qt)
+    _bitwise(cans1, ans1, "v1")
+    assert int(cr1) == int(r1)
+    # zero-recompile guarantee: the swap added no compiled shapes
+    # (the qs/qt batch is the same 32-shape as the warm call)
+    assert cmgr.family.cache_sizes("interpret") == sizes0
+
+    es = np.concatenate([src, [core_u, n_base]])
+    ed = np.concatenate([dst, [n_base, core_u]])
+    ew = np.concatenate([w, [1.0, 1.0]]).astype(np.float32)
+    scratch = ISLabelIndex.build(n, es, ed, ew, cfg)
+    _bitwise(cans1, scratch.query(qs, qt), "rebuild")
+
+    # delete restores v0 answers bitwise; deleted vertex reads +inf
+    cver2 = cmgr.apply([MutationOp("delete", n_base)])
+    cans2, _ = cfn(cver2.state, s, t)
+    _bitwise(cans2, cans0, "delete-restore")
+    gone, _ = cfn(cver2.state, qs[:32], qt[:32])
+    assert np.isinf(np.asarray(gone)[np.asarray(qs[:32]) == n_base]).all()
+    assert cmgr.family.cache_sizes("interpret") == sizes0

@@ -145,3 +145,75 @@ def test_config_chunk_and_backend_plumbed():
         assert np.array_equal(np.nan_to_num(np.asarray(idx2.query(s, t)),
                                             posinf=-1.0),
                               np.nan_to_num(got, posinf=-1.0))
+
+
+# ----------------------------------------------- kernel-route selection
+def _random_core(v, e, seed=0):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.integers(0, v, e).astype(np.int32)),
+            jnp.asarray(r.integers(0, v, e).astype(np.int32)),
+            jnp.asarray(r.integers(1, 5, e).astype(np.float32)))
+
+
+def test_dispatch_density_routing():
+    """Route selection: density >= threshold with a small core picks the
+    minplus dense route; sparse cores pick the fused kernel; the VMEM
+    budget and the fused kill-switch both fall back to the launch loop."""
+    v = 100
+    dense_edges = _random_core(v, int(0.1 * v * v))
+    sparse_edges = _random_core(v, 2 * v, seed=1)
+    assert CoreRelaxer(*dense_edges, v).mode == "dense"
+    assert CoreRelaxer(*sparse_edges, v).mode == "fused"
+    # threshold raised above the actual density -> no dense route
+    assert CoreRelaxer(*dense_edges, v,
+                       dense_threshold=0.5).mode == "fused"
+    # core too big for the dense route even when dense enough
+    assert CoreRelaxer(*dense_edges, v, dense_cap=50).mode == "fused"
+    # fused kill-switch -> legacy per-round loop
+    assert CoreRelaxer(*sparse_edges, v, fused=False,
+                       dense_threshold=2.0).mode == "ell_loop"
+    # fused working set over the VMEM budget -> loop fallback
+    assert CoreRelaxer(*sparse_edges, v, dense_threshold=2.0,
+                       vmem_budget=1).mode == "ell_loop"
+
+
+def test_dispatch_env_overrides(monkeypatch):
+    v = 100
+    dense_edges = _random_core(v, int(0.1 * v * v))
+    monkeypatch.setenv("ISLABEL_FUSED_RELAX", "0")
+    monkeypatch.setenv("ISLABEL_DENSE_THRESHOLD", "0.5")
+    assert CoreRelaxer(*dense_edges, v).mode == "ell_loop"
+    monkeypatch.delenv("ISLABEL_DENSE_THRESHOLD")
+    monkeypatch.delenv("ISLABEL_FUSED_RELAX")
+    assert CoreRelaxer(*dense_edges, v).mode == "dense"
+
+
+@pytest.mark.parametrize("force", ["dense", "fused", "ell_loop"])
+def test_all_kernel_routes_bitwise_equal_reference(force):
+    """Every kernel route (dense minplus GEMM, fused all-rounds kernel,
+    per-round launch loop) == the COO reference bitwise, with the same
+    round count."""
+    v, e, q = 120, 1450, 9           # density ~0.1: dense-eligible
+    edges = _random_core(v, e, seed=2)
+    kw = {"dense": dict(),
+          "fused": dict(dense_threshold=2.0),
+          "ell_loop": dict(dense_threshold=2.0, fused=False)}[force]
+    relaxer = CoreRelaxer(*edges, v, **kw)
+    assert relaxer.mode == force
+    r = np.random.default_rng(3)
+    seed_s = np.full((q, v + 1), np.inf, np.float32)
+    seed_t = np.full((q, v + 1), np.inf, np.float32)
+    seed_s[np.arange(q), r.integers(0, v, q)] = 0.0
+    seed_t[np.arange(q), r.integers(0, v, q)] = 0.0
+    seed_s[q - 1, :] = np.inf            # empty frontier row
+    mu = jnp.full((q,), jnp.inf, jnp.float32)
+    a_ref, ds_r, dt_r, r_ref = relaxer.run(
+        jnp.asarray(seed_s), jnp.asarray(seed_t), mu, v,
+        backend="reference")
+    a_k, ds_k, dt_k, r_k = relaxer.run(
+        jnp.asarray(seed_s), jnp.asarray(seed_t), mu, v,
+        backend="interpret")
+    assert int(r_ref) == int(r_k)
+    for a, b in ((a_ref, a_k), (ds_r, ds_k), (dt_r, dt_k)):
+        _assert_same(b, np.asarray(a))
+    assert np.isinf(np.asarray(ds_k)[q - 1]).all()

@@ -187,3 +187,141 @@ def test_kernel_engine_equivalence():
     fin = np.isfinite(a)
     assert (np.isfinite(b) == fin).all()
     np.testing.assert_allclose(a[fin], b[fin], rtol=1e-6)
+
+
+# ------------------------------------------------ minplus inf-padding
+def test_minplus_inf_padding_edges():
+    """inf is the (min,+) additive zero: all-inf rows/cols (the exact
+    shape padding the dispatch layer feeds the kernel) must survive
+    bitwise — inf rows stay inf, finite results never contaminated."""
+    m, k, n = 32, 48, 64
+    a = (RNG.integers(1, 9, (m, k))).astype(np.float32)
+    b = (RNG.integers(1, 9, (k, n))).astype(np.float32)
+    a[5, :] = np.inf                      # unreachable source row
+    a[:, 7] = np.inf                      # dead intermediate (a-side)
+    b[7, :] = np.inf                      # dead intermediate (b-side)
+    b[:, 9] = np.inf                      # unreachable target col
+    a[11, :] = np.inf
+    b[:, 11] = np.inf
+    got = np.asarray(minplus_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    bm=8, bn=16, bk=16,
+                                    backend="interpret"))
+    want = np.asarray(minplus_matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    fin = np.isfinite(want)
+    assert (np.isfinite(got) == fin).all()
+    # integer weights: sums are exact, equality is bitwise
+    np.testing.assert_array_equal(got[fin], want[fin])
+    assert np.isinf(got[5]).all() and np.isinf(got[:, 9]).all()
+
+
+def test_minplus_all_inf_block():
+    a = np.full((16, 16), np.inf, np.float32)
+    b = (RNG.integers(1, 9, (16, 16))).astype(np.float32)
+    got = np.asarray(minplus_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    backend="interpret"))
+    assert np.isinf(got).all()
+
+
+# ------------------------------------------------ fused relax kernel
+def _ell_graph(v, e, seed=0):
+    r = np.random.default_rng(seed)
+    src = r.integers(0, v, e)
+    dst = r.integers(0, v, e)
+    w = r.integers(1, 5, e).astype(np.float32)
+    from repro.kernels.spmv_relax.ops import coo_to_ell as _c
+    return _c(v, src, dst, w)
+
+
+def test_fused_relax_matches_iterated_spmv():
+    """One fused launch == the per-round spmv loop run to its fixed
+    point: bitwise distances AND the same round count (reported as the
+    max over per-block in-kernel exit rounds)."""
+    from repro.kernels.spmv_relax.kernel import fused_relax_kernel
+    v, q = 128, 16
+    ids, ws = _ell_graph(v, 400)
+    dist = np.full((q, v), np.inf, np.float32)
+    dist[np.arange(q), RNG.integers(0, v, q)] = 0.0
+    dist[q - 1, :] = np.inf               # all-inf row settles immediately
+    d = jnp.asarray(dist)
+    rounds_loop = 0
+    while True:
+        d2 = spmv_relax(d, ids, ws, backend="interpret")
+        rounds_loop += 1
+        if bool(jnp.all(~(d2 < d))):
+            d = d2
+            break
+        d = d2
+        assert rounds_loop < v
+    out, blk_rounds = fused_relax_kernel(jnp.asarray(dist), ids, ws,
+                                         max_rounds=v, bq=8,
+                                         interpret=True)
+    got, want = np.asarray(out), np.asarray(d)
+    fin = np.isfinite(want)
+    assert (np.isfinite(got) == fin).all()
+    np.testing.assert_array_equal(got[fin], want[fin])
+    assert int(np.max(np.asarray(blk_rounds))) == rounds_loop
+    assert np.isinf(got[q - 1]).all()
+
+
+def test_fused_relax_respects_max_rounds():
+    """max_rounds truncates the fixed-point loop exactly like the
+    launch-per-round path: k fused rounds == k spmv launches."""
+    from repro.kernels.spmv_relax.kernel import fused_relax_kernel
+    v, q = 128, 8
+    ids, ws = _ell_graph(v, 300, seed=3)
+    dist = np.full((q, v), np.inf, np.float32)
+    dist[np.arange(q), RNG.integers(0, v, q)] = 0.0
+    d = jnp.asarray(dist)
+    for _ in range(2):
+        d = spmv_relax(d, ids, ws, backend="interpret")
+    out, blk_rounds = fused_relax_kernel(jnp.asarray(dist), ids, ws,
+                                         max_rounds=2, bq=8,
+                                         interpret=True)
+    got, want = np.asarray(out), np.asarray(d)
+    fin = np.isfinite(want)
+    assert (np.isfinite(got) == fin).all()
+    np.testing.assert_array_equal(got[fin], want[fin])
+    assert int(np.max(np.asarray(blk_rounds))) <= 2
+
+
+def test_fused_vmem_model_is_monotone():
+    from repro.kernels.spmv_relax.kernel import fused_vmem_bytes
+    assert fused_vmem_bytes(1024, 16) < fused_vmem_bytes(2048, 16)
+    assert fused_vmem_bytes(1024, 16) < fused_vmem_bytes(1024, 32)
+    # exact accounting: dist in+out blocks + ELL ids/w + gathered cand
+    v, dw, bq = 512, 16, 8
+    assert fused_vmem_bytes(v, dw, bq) == \
+        4 * (2 * bq * v + 2 * v * dw + bq * v * dw)
+
+
+# ----------------------------------------- packed (delta16) intersect
+def test_label_intersect_packed_matches_plain():
+    """Fused decode+join kernel == plain kernel on the decoded planes,
+    bitwise, for both distance codecs (int32 integral / fp32 pass-
+    through), including rows that are all pads."""
+    from repro.core.labels import LabelRows, encode_labels
+    from repro.kernels.label_intersect.ops import label_intersect_rows
+    q, l, n = 24, 32, 5000
+    r = np.random.default_rng(5)
+    ids = (r.integers(0, 200, (q, 1))
+           + np.cumsum(r.integers(1, 64, (q, l)), axis=1)).astype(np.int32)
+    ids[::3, l - 5:] = n                 # pad tails
+    ids[7, :] = n                        # fully padded row
+    for d_plane in (r.integers(0, 50, (q, l)).astype(np.float32),
+                    (r.random((q, l)) * 9).astype(np.float32)):
+        d = np.where(ids < n, d_plane, np.inf).astype(np.float32)
+        ids_t = np.roll(ids, 1, axis=0)
+        d_t = np.roll(d, 1, axis=0)
+        enc_s = encode_labels(ids, d, n)
+        enc_t = encode_labels(ids_t, d_t, n)
+        want = np.asarray(label_intersect(
+            jnp.asarray(ids), jnp.asarray(d), jnp.asarray(ids_t),
+            jnp.asarray(d_t), n, backend="interpret"))
+        got = np.asarray(label_intersect_rows(
+            LabelRows(*(jnp.asarray(x) for x in enc_s)),
+            LabelRows(*(jnp.asarray(x) for x in enc_t)),
+            n, codec="delta16", backend="interpret"))
+        fin = np.isfinite(want)
+        assert (np.isfinite(got) == fin).all()
+        np.testing.assert_array_equal(got[fin], want[fin])
+        assert np.isinf(got[7])
