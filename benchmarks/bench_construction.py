@@ -1,27 +1,159 @@
 """Paper Table 3 + Table 7: index construction — k, |V_Gk|, |E_Gk|,
-label size, indexing time; at thresholds sigma=0.95 and 0.90."""
+label size, indexing time — plus the device-builder gates and the
+million-vertex scaling trajectory (docs/CONSTRUCTION.md).
+
+Two sections:
+
+* **gate rows** (always; CI's bench-smoke diffs them against the
+  committed baseline): the tiny presets at sigma 0.95/0.90, each built
+  by BOTH level-loop builders. Hard-asserted here, and re-gated as
+  behavior metrics by bench-gate:
+    - ``bitwise_equal`` — the device-resident builder's full index
+      (levels, up-edges, core, labels) is bitwise-identical to the
+      host reference loop at fixed seed;
+    - ``syncs_per_level`` <= 1 — one blocking device→host read per
+      peeled level in the device builder;
+    - ``overflow`` == 0.
+* **trajectory** (``--full``): 10^4 → 10^6-vertex builds through the
+  device builder, written to the ``trajectory`` payload of
+  ``BENCH_table3_construction.json`` (payload keys are invisible to the
+  bench-gate row diff, so the committed million-vertex record never
+  fights the tiny CI rerun).
+"""
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import graphs_for_scale, row
+import numpy as np
+
+from benchmarks.common import graphs_for_scale, row, write_json
 from repro.core import ISLabelIndex, IndexConfig
 
+GATE_SIGMAS = (0.95, 0.90)
 
-def main(full: bool = False):
-    for sigma in (0.95, 0.90):
-        for name, (n, src, dst, w) in graphs_for_scale(full):
-            cfg = IndexConfig(sigma=sigma, l_cap=1024, label_chunk=2048)
-            t0 = time.perf_counter()
-            idx = ISLabelIndex.build(n, src, dst, w, cfg)
-            dt = time.perf_counter() - t0
-            st = idx.stats
+# 10^4 -> 10^6 trajectory, BTC-like low-degree regime (avg deg 2.2 —
+# the paper's billion-edge dataset is degree-2.19; this is the regime a
+# single container core can take to a million vertices end-to-end).
+TRAJECTORY = [
+    # l_cap=64: the sigma=0.95 stop rule keeps this regime's hierarchy
+    # shallow (k~4) — measured max label fill is 19 at both 10^4 and
+    # 10^5; the label-join cost is linear in l_cap, so the cap stays
+    # tight with >3x headroom (overflow raises, never truncates).
+    ("er1e4", "er:10000:2.2@1", dict(l_cap=64, label_chunk=4096)),
+    ("er1e5", "er:100000:2.2@1", dict(l_cap=64, label_chunk=8192)),
+    ("er1e6", "er:1000000:2.2@1", dict(l_cap=64, label_chunk=8192)),
+]
+
+
+def _index_arrays(idx: ISLabelIndex) -> dict:
+    return {
+        "k": np.int32(idx.k), "level": idx.level,
+        "up_ids": idx.up_ids, "up_w": idx.up_w, "up_via": idx.up_via,
+        "core_src": idx.core_src, "core_dst": idx.core_dst,
+        "core_w": idx.core_w, "core_via": idx.core_via,
+        "lbl_ids": np.asarray(idx.lbl_ids), "lbl_d": np.asarray(idx.lbl_d),
+        "lbl_pred": np.asarray(idx.lbl_pred),
+        "level_sizes": np.asarray(idx.stats.level_sizes),
+        "graph_sizes": np.asarray(idx.stats.graph_sizes),
+        "mis_rounds": np.asarray(idx.stats.mis_rounds),
+    }
+
+
+def bitwise_diff(a: ISLabelIndex, b: ISLabelIndex) -> list[str]:
+    """Field names on which the two indexes are not bitwise-identical."""
+    da, db = _index_arrays(a), _index_arrays(b)
+    return [name for name in da
+            if not np.array_equal(da[name], db[name], equal_nan=True)]
+
+
+def _build(n, src, dst, w, cfg):
+    t0 = time.perf_counter()
+    idx = ISLabelIndex.build(n, src, dst, w, cfg)
+    return idx, time.perf_counter() - t0
+
+
+def _sync_metrics(idx: ISLabelIndex) -> tuple[float, int]:
+    st = idx.stats
+    per_level = st.peel_loop_syncs / max(1, st.peel_iters)
+    return per_level, st.peel_iters
+
+
+def gate_rows():
+    """Tiny-preset dual-builder gate — the CI-diffed section."""
+    for sigma in GATE_SIGMAS:
+        for name, (n, src, dst, w) in graphs_for_scale(False):
+            base = dict(sigma=sigma, l_cap=256, label_chunk=2048)
+            idx_dev, dt = _build(n, src, dst, w,
+                                 IndexConfig(builder="device", **base))
+            idx_host, _ = _build(n, src, dst, w,
+                                 IndexConfig(builder="host", **base))
+            mismatch = bitwise_diff(idx_dev, idx_host)
+            assert not mismatch, (
+                f"device builder diverged from host reference on "
+                f"{name}@{sigma}: {mismatch}")
+            spl, iters = _sync_metrics(idx_dev)
+            assert spl <= 1.0, (
+                f"{name}@{sigma}: {idx_dev.stats.peel_loop_syncs} blocking "
+                f"syncs over {iters} peeled levels (gate: <= 1 per level)")
+            st = idx_dev.stats
             row("table3_construction", f"{name}@{sigma}", dt * 1e6,
                 n=n, m=len(src) // 2, k=st.k, V_Gk=st.n_core,
                 E_Gk=st.m_core // 2, label_entries=st.label_entries,
                 label_MB=round(st.label_bytes / 1e6, 2),
-                build_s=round(dt, 2))
+                build_s=round(dt, 2), peel_s=round(st.peel_seconds, 2),
+                label_s=round(st.label_seconds, 2),
+                bitwise_equal=1, overflow=0,
+                syncs_per_level=round(spl, 4),
+                mis_rounds_total=int(sum(st.mis_rounds)))
+
+
+def trajectory_point(name: str, spec: str, overrides: dict) -> dict:
+    from repro.data.pipeline import graph_from_spec
+    t0 = time.perf_counter()
+    n, src, dst, w = graph_from_spec(spec)
+    gen_s = time.perf_counter() - t0
+    cfg = IndexConfig(builder="device", **overrides)
+    idx, dt = _build(n, src, dst, w, cfg)
+    st = idx.stats
+    spl, iters = _sync_metrics(idx)
+    assert spl <= 1.0, f"{name}: syncs_per_level {spl} > 1"
+    point = {
+        "name": name, "spec": spec, "n": n, "m": len(src) // 2,
+        "gen_s": round(gen_s, 2), "build_s": round(dt, 2),
+        "peel_s": round(st.peel_seconds, 2),
+        "label_s": round(st.label_seconds, 2),
+        "k": st.k, "V_Gk": st.n_core, "E_Gk": st.m_core // 2,
+        "levels_peeled": len(st.level_sizes),
+        "label_entries": st.label_entries,
+        "label_MB": round(st.label_bytes / 1e6, 2),
+        "host_syncs": st.host_syncs,
+        "peel_loop_syncs": st.peel_loop_syncs,
+        "syncs_per_level": round(spl, 4),
+        "peak_device_MB": round(st.peak_device_bytes / 1e6, 1),
+        "l_cap": cfg.l_cap,
+    }
+    print("# trajectory " + " ".join(f"{k}={v}" for k, v in point.items()))
+    return point
+
+
+def main(full: bool = False):
+    gate_rows()
+    traj = [trajectory_point(*p) for p in TRAJECTORY] if full else []
+    write_json("table3_construction", {"trajectory": traj})
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="run the 10^4 -> 10^6 scaling trajectory "
+                         "(slow; ~minutes for the 10^6 build)")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_table3_construction.json")
+    args = ap.parse_args()
+    common.OUT_DIR = args.out
+    print("table,name,us_per_call,derived")
+    main(full=args.full)

@@ -19,9 +19,14 @@ class IndexConfig:
                                # min-degree; we peel only deg<=d_cap vertices)
     e_cap_factor: float = 2.0  # edge capacity = factor * initial |E|
     aug_cap_factor: float = 1.0  # IS-incident edge buffer = factor * |E|
+    builder: str = "device"    # level loop: device (sync-free, one stat
+                               # read per level) | host (reference loop;
+                               # bitwise-equal, docs/CONSTRUCTION.md)
     # -- labeling ----------------------------------------------------------
     l_cap: int = 256           # max label entries per vertex
     label_chunk: int = 4096    # vertices labeled per jitted chunk
+    sync_every: int = 8        # labeling overflow-check cadence: one
+                               # deferred device read per this many levels
     # -- query -------------------------------------------------------------
     max_relax_rounds: int = 0  # 0 = bound by n_core (exact Bellman-Ford)
     query_backend: str = "auto"  # kernel dispatch: auto | pallas |
@@ -54,9 +59,19 @@ class BuildStats:
     label_bytes: int = 0
     build_seconds: float = 0.0
     mis_rounds: list = dataclasses.field(default_factory=list)
+    # construction-phase split + sync accounting (docs/CONSTRUCTION.md)
+    peel_seconds: float = 0.0       # hierarchy (peel) phase wall time
+    label_seconds: float = 0.0      # labeling phase wall time
+    host_syncs: int = 0             # blocking device→host reads during build
+    peel_loop_syncs: int = 0        # blocking reads inside the level loop
+    peel_iters: int = 0             # level-loop iterations; the bench gates
+                                    # peel_loop_syncs / peel_iters <= 1
+    peak_device_bytes: int = 0      # max live device bytes observed (sampled)
 
     def summary(self) -> str:
         return (f"n={self.n} m={self.m} k={self.k} |V_Gk|={self.n_core} "
                 f"|E_Gk|={self.m_core} label_entries={self.label_entries} "
                 f"label_MB={self.label_bytes / 1e6:.2f} "
-                f"build_s={self.build_seconds:.2f}")
+                f"build_s={self.build_seconds:.2f} "
+                f"(peel {self.peel_seconds:.2f} + label {self.label_seconds:.2f}) "
+                f"host_syncs={self.host_syncs}")

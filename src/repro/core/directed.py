@@ -131,8 +131,8 @@ class DiISLabelIndex:
 
     @staticmethod
     def build(n, src, dst, w, cfg: IndexConfig = IndexConfig()):
-        if (cfg.d_cap + 2) * (n + 1) >= 2 ** 32:
-            raise ValueError("n too large for uint32 MIS keys")
+        # no key-width guard: the MIS compares (deg, perm) as two words
+        # (core/mis.py), so million-vertex builds need no uint32 budget
         m0 = len(src)
         e_cap, aug_cap = cfg.e_cap(m0), cfg.aug_cap(m0)
         g = gcsr.from_host_edges(src, dst, w, n, e_cap)

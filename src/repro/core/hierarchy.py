@@ -7,22 +7,36 @@ edge list: surviving edges + augmenting edges (u,w) for every 2-path
 u-v-w through a removed v, deduped keeping min weight (Alg. 3's external
 sort-merge, expressed as lexsort + segment_min).
 
-The level loop is host-driven; each step is one fixed-shape jitted call.
+Two builders share the level loop semantics (docs/CONSTRUCTION.md):
+
+``build_hierarchy_device`` (default) keeps every buffer device-resident
+across levels: level assignment and up-edge recording happen inside the
+jitted ``_peel_step`` (donated buffers, masked ``where`` under the IS
+mask), and the only blocking host transfer per level is one int32[5]
+stat vector — IS size, deduped edge count, augmentation fill, MIS
+rounds, next graph size — from which the host applies the stop rule and
+the overflow checks (the overflow flags ride the same transfer, so the
+check costs no extra sync and still raises with the offending level).
+Level/up-edge/core arrays come back to host in one final pull.
+
+``build_hierarchy_host`` is the original loop — one ``peel_level`` call
+per level with per-level scalar syncs and full neighbor-matrix round
+trips through numpy. It is kept as the reference the construction bench
+gates the device builder against, bitwise, at fixed seed.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sync as hsync
 from repro.core.config import IndexConfig
 from repro.core.mis import independent_set
 from repro.graphs import csr as gcsr
-from repro.graphs import segment_ops as sops
 
 
 @dataclasses.dataclass
@@ -43,6 +57,9 @@ class Hierarchy:
     level_sizes: list
     graph_sizes: list
     mis_rounds: list
+    host_syncs: int = 0         # blocking device→host reads in the level loop
+    peel_iters: int = 0         # level-loop iterations (peel_level calls) —
+                                # the bench gate is host_syncs <= peel_iters
 
 
 @partial(jax.jit, static_argnames=("n", "d_cap", "aug_cap"))
@@ -103,10 +120,133 @@ def peel_level(src, dst, w, via, active, rng, n: int, d_cap: int, aug_cap: int):
             n_unique, n_is, n_is_edges, rounds)
 
 
-def build_hierarchy(n: int, src, dst, w, cfg: IndexConfig) -> Hierarchy:
-    """Host loop: peel levels until the size-reduction stop rule (§5.1)."""
-    if (cfg.d_cap + 2) * (n + 1) >= 2 ** 32:
-        raise ValueError("n too large for uint32 MIS keys; lower d_cap or shard")
+@partial(jax.jit, static_argnames=("n", "d_cap", "aug_cap"),
+         donate_argnames=("src", "dst", "w", "via", "active", "level_dev",
+                          "up_ids", "up_w", "up_via"))
+def _peel_step(src, dst, w, via, active, level_dev, up_ids, up_w, up_via,
+               rng, n_verts, lvl, n: int, d_cap: int, aug_cap: int):
+    """One device-resident hierarchy level.
+
+    Runs ``peel_level`` and folds the host-side bookkeeping of the
+    original loop into the same jitted call: level recording and up-edge
+    recording under the IS mask, active-set update, and the running
+    ``|V|+|E|/2`` size for the stop rule. ``lvl`` and ``n_verts`` are
+    traced scalars so the call compiles once per (n, d_cap, aug_cap).
+
+    Returns the updated state plus ``stats`` int32[5] =
+    ``[n_is, n_unique, n_is_edges, mis_rounds, new_size]`` — the one
+    small per-level transfer the host reads. When the IS is empty the
+    state update is the identity (the host then stops at level ``lvl``
+    with the pre-step graph as the core, exactly like the host loop
+    that breaks before recording).
+    """
+    rng, sub = jax.random.split(rng)
+    (o_src, o_dst, o_w, o_via, in_is, nbr_ids, nbr_w, nbr_via,
+     n_unique, n_is, n_is_edges, rounds) = peel_level(
+        src, dst, w, via, active, sub, n, d_cap, aug_cap)
+
+    has_is = n_is > 0
+    # record level + up-edges under the IS mask (row n of up_* is the
+    # sentinel row — the mask is False there by construction)
+    rec = jnp.concatenate([in_is, jnp.zeros((1,), bool)])
+    level_dev = jnp.where(in_is, lvl.astype(jnp.int32), level_dev)
+    up_ids = jnp.where(rec[:, None], nbr_ids, up_ids)
+    up_w = jnp.where(rec[:, None], nbr_w, up_w)
+    up_via = jnp.where(rec[:, None], nbr_via, up_via)
+    active = active & ~in_is
+    # keep the pre-step edge list when the IS is empty: that graph IS the
+    # core (dedup of an already-deduped list is value-identical, but the
+    # guard makes the no-op explicit)
+    src = jnp.where(has_is, o_src, src)
+    dst = jnp.where(has_is, o_dst, dst)
+    w = jnp.where(has_is, o_w, w)
+    via = jnp.where(has_is, o_via, via)
+
+    n_verts = n_verts - n_is
+    new_size = n_verts + n_unique // 2
+    stats = jnp.stack([n_is, n_unique, n_is_edges, rounds, new_size])
+    return (src, dst, w, via, active, level_dev, up_ids, up_w, up_via,
+            rng, n_verts, stats)
+
+
+def build_hierarchy_device(n: int, src, dst, w, cfg: IndexConfig) -> Hierarchy:
+    """Device-resident level loop: one blocking host sync per level.
+
+    All state (edge list, active set, level assignment, up-edge matrix)
+    stays on device across levels in donated buffers; the host reads one
+    int32[5] stat vector per level to apply the §5.1 stop rule and the
+    capacity checks, then pulls everything once after the loop.
+    """
+    m0 = len(src)
+    e_cap = cfg.e_cap(m0)
+    aug_cap = cfg.aug_cap(m0)
+    g = gcsr.from_host_edges(src, dst, w, n, e_cap)
+
+    state = (g.src, g.dst, g.weight, g.via,
+             jnp.ones(n, bool),                              # active
+             jnp.zeros(n, jnp.int32),                        # level
+             jnp.full((n + 1, cfg.d_cap), n, jnp.int32),     # up_ids
+             jnp.full((n + 1, cfg.d_cap), jnp.inf, jnp.float32),
+             jnp.full((n + 1, cfg.d_cap), -1, jnp.int32),
+             jax.random.PRNGKey(cfg.seed),
+             jnp.int32(n))                                   # n_verts
+
+    graph_sizes = [n + m0 // 2]
+    level_sizes, mis_rounds = [], []
+    k = 1
+    peel_iters = 0
+    with hsync.sync_span() as span:
+        for i in range(1, cfg.k_max + 1):
+            peel_iters = i
+            *state, stats = _peel_step(*state, jnp.int32(i), n,
+                                       cfg.d_cap, aug_cap)
+            # the single blocking transfer of the level: stop-rule scalar
+            # + overflow flags in one int32[5] read
+            n_is, n_unique, n_is_edges, rounds, new_size = (
+                int(x) for x in hsync.host_read(stats))
+            if n_unique > e_cap:
+                raise RuntimeError(
+                    f"edge capacity overflow at level {i}: {n_unique} > "
+                    f"{e_cap}; raise IndexConfig.e_cap_factor")
+            if n_is_edges > aug_cap:
+                raise RuntimeError(
+                    f"augmentation buffer overflow at level {i}; raise "
+                    f"aug_cap_factor")
+            if n_is == 0:
+                k = i
+                break
+            level_sizes.append(n_is)
+            mis_rounds.append(rounds)
+            k = i + 1
+            graph_sizes.append(new_size)
+            if cfg.k_force:
+                if k >= cfg.k_force:
+                    break
+            elif new_size > cfg.sigma * graph_sizes[-2]:
+                break
+    loop_syncs = span.count
+
+    # one final pull of the whole hierarchy state
+    (cur_src, cur_dst, cur_w, cur_via, _active, level_dev,
+     up_ids_d, up_w_d, up_via_d, _rng, _nv) = state
+    level, up_ids, up_w, up_via, c_src_p, c_dst_p, c_w_p, c_via_p = (
+        hsync.host_read((level_dev, up_ids_d, up_w_d, up_via_d,
+                         cur_src, cur_dst, cur_w, cur_via)))
+    level = np.array(level)
+    level[level == 0] = k
+    mask = c_src_p < n
+    return Hierarchy(n=n, k=k, level=level, up_ids=np.array(up_ids),
+                     up_w=np.array(up_w), up_via=np.array(up_via),
+                     core_src=c_src_p[mask], core_dst=c_dst_p[mask],
+                     core_w=c_w_p[mask], core_via=c_via_p[mask],
+                     level_sizes=level_sizes, graph_sizes=graph_sizes,
+                     mis_rounds=mis_rounds, host_syncs=loop_syncs,
+                     peel_iters=peel_iters)
+
+
+def build_hierarchy_host(n: int, src, dst, w, cfg: IndexConfig) -> Hierarchy:
+    """Original host-driven loop (reference for the bitwise build gate):
+    per-level scalar syncs + full neighbor-matrix round trips to numpy."""
     m0 = len(src)
     e_cap = cfg.e_cap(m0)
     aug_cap = cfg.aug_cap(m0)
@@ -125,43 +265,51 @@ def build_hierarchy(n: int, src, dst, w, cfg: IndexConfig) -> Hierarchy:
     graph_sizes = [n_verts + n_edges // 2]
     level_sizes, mis_rounds = [], []
     k = 1
-    for i in range(1, cfg.k_max + 1):
-        rng, sub = jax.random.split(rng)
-        (o_src, o_dst, o_w, o_via, in_is, nbr_ids, nbr_w, nbr_via,
-         n_unique, n_is, n_is_edges, rounds) = peel_level(
-            cur_src, cur_dst, cur_w, cur_via, active, sub, n, cfg.d_cap, aug_cap)
-        n_is_h = int(n_is)
-        if int(n_unique) > e_cap:
-            raise RuntimeError(
-                f"edge capacity overflow at level {i}: {int(n_unique)} > {e_cap}; "
-                f"raise IndexConfig.e_cap_factor")
-        if int(n_is_edges) > aug_cap:
-            raise RuntimeError(
-                f"augmentation buffer overflow at level {i}; raise aug_cap_factor")
-        if n_is_h == 0:
-            k = i
-            break
-        # record level + up-edges on host
-        is_mask = np.asarray(in_is)
-        level[is_mask] = i
-        up_ids[:n][is_mask] = np.asarray(nbr_ids)[:n][is_mask]
-        up_w[:n][is_mask] = np.asarray(nbr_w)[:n][is_mask]
-        up_via[:n][is_mask] = np.asarray(nbr_via)[:n][is_mask]
-        active = active & ~in_is
-        level_sizes.append(n_is_h)
-        mis_rounds.append(int(rounds))
-
-        n_verts -= n_is_h
-        n_edges = int(n_unique)
-        new_size = n_verts + n_edges // 2
-        cur_src, cur_dst, cur_w, cur_via = o_src, o_dst, o_w, o_via
-        k = i + 1
-        graph_sizes.append(new_size)
-        if cfg.k_force:
-            if k >= cfg.k_force:
+    peel_iters = 0
+    with hsync.sync_span() as span:
+        for i in range(1, cfg.k_max + 1):
+            peel_iters = i
+            rng, sub = jax.random.split(rng)
+            (o_src, o_dst, o_w, o_via, in_is, nbr_ids, nbr_w, nbr_via,
+             n_unique, n_is, n_is_edges, rounds) = peel_level(
+                cur_src, cur_dst, cur_w, cur_via, active, sub, n, cfg.d_cap,
+                aug_cap)
+            n_is_h = int(hsync.host_read(n_is))
+            n_unique_h = int(hsync.host_read(n_unique))
+            if n_unique_h > e_cap:
+                raise RuntimeError(
+                    f"edge capacity overflow at level {i}: "
+                    f"{n_unique_h} > {e_cap}; "
+                    f"raise IndexConfig.e_cap_factor")
+            if int(hsync.host_read(n_is_edges)) > aug_cap:
+                raise RuntimeError(
+                    f"augmentation buffer overflow at level {i}; raise "
+                    f"aug_cap_factor")
+            if n_is_h == 0:
+                k = i
                 break
-        elif new_size > cfg.sigma * graph_sizes[-2]:
-            break
+            # record level + up-edges on host
+            is_mask = hsync.host_read(in_is)
+            level[is_mask] = i
+            up_ids[:n][is_mask] = hsync.host_read(nbr_ids)[:n][is_mask]
+            up_w[:n][is_mask] = hsync.host_read(nbr_w)[:n][is_mask]
+            up_via[:n][is_mask] = hsync.host_read(nbr_via)[:n][is_mask]
+            active = active & ~in_is
+            level_sizes.append(n_is_h)
+            mis_rounds.append(int(hsync.host_read(rounds)))
+
+            n_verts -= n_is_h
+            n_edges = n_unique_h
+            new_size = n_verts + n_edges // 2
+            cur_src, cur_dst, cur_w, cur_via = o_src, o_dst, o_w, o_via
+            k = i + 1
+            graph_sizes.append(new_size)
+            if cfg.k_force:
+                if k >= cfg.k_force:
+                    break
+            elif new_size > cfg.sigma * graph_sizes[-2]:
+                break
+    loop_syncs = span.count
 
     level[level == 0] = k
 
@@ -170,4 +318,19 @@ def build_hierarchy(n: int, src, dst, w, cfg: IndexConfig) -> Hierarchy:
     return Hierarchy(n=n, k=k, level=level, up_ids=up_ids, up_w=up_w,
                      up_via=up_via, core_src=c_src, core_dst=c_dst,
                      core_w=c_w, core_via=c_via, level_sizes=level_sizes,
-                     graph_sizes=graph_sizes, mis_rounds=mis_rounds)
+                     graph_sizes=graph_sizes, mis_rounds=mis_rounds,
+                     host_syncs=loop_syncs, peel_iters=peel_iters)
+
+
+def build_hierarchy(n: int, src, dst, w, cfg: IndexConfig) -> Hierarchy:
+    """Peel levels until the size-reduction stop rule (§5.1).
+
+    Dispatches on ``cfg.builder``: ``device`` (default, sync-free level
+    loop) or ``host`` (the original reference loop). Both are
+    bitwise-identical at fixed seed — gated by ``bench_construction``.
+    """
+    if cfg.builder == "host":
+        return build_hierarchy_host(n, src, dst, w, cfg)
+    if cfg.builder != "device":
+        raise ValueError(f"unknown IndexConfig.builder: {cfg.builder!r}")
+    return build_hierarchy_device(n, src, dst, w, cfg)

@@ -13,6 +13,7 @@ import json
 import time
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -20,6 +21,19 @@ from repro.core.config import BuildStats, IndexConfig
 from repro.core.hierarchy import Hierarchy, build_hierarchy
 from repro.core.labeling import build_labels
 from repro.core.query import QueryEngine
+
+
+def live_device_bytes() -> int:
+    """Sum of live device-array bytes — the sampled 'peak device bytes'
+    probe of the construction bench (backend memory_stats when the
+    platform reports them, else the live-array walk; CPU reports none)."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats and "peak_bytes_in_use" in stats:
+            return int(stats["peak_bytes_in_use"])
+    except Exception:
+        pass
+    return int(sum(x.nbytes for x in jax.live_arrays()))
 
 
 @dataclasses.dataclass
@@ -58,12 +72,21 @@ class ISLabelIndex:
     # ------------------------------------------------------------------ build
     @staticmethod
     def build(n, src, dst, w, cfg: IndexConfig = IndexConfig()) -> "ISLabelIndex":
+        from repro.core import sync as hsync
         t0 = time.perf_counter()
+        syncs0 = hsync.sync_count()
         hier = build_hierarchy(n, src, dst, w, cfg)
+        t1 = time.perf_counter()
         lbl_ids, lbl_d, lbl_pred = build_labels(hier, cfg)
+        jax.block_until_ready(lbl_ids)
+        t2 = time.perf_counter()
         idx = ISLabelIndex._assemble(n, hier, lbl_ids, lbl_d, lbl_pred, cfg,
                                      m_input=len(src))
         idx.stats.build_seconds = time.perf_counter() - t0
+        idx.stats.peel_seconds = t1 - t0
+        idx.stats.label_seconds = t2 - t1
+        idx.stats.host_syncs = hsync.sync_count() - syncs0
+        idx.stats.peak_device_bytes = live_device_bytes()
         return idx
 
     @staticmethod
@@ -88,7 +111,8 @@ class ISLabelIndex:
             n=n, m=m_input, k=hier.k, n_core=n_core,
             m_core=len(hier.core_src), level_sizes=hier.level_sizes,
             graph_sizes=hier.graph_sizes, label_entries=entries,
-            label_bytes=entries * 8, mis_rounds=hier.mis_rounds)
+            label_bytes=entries * 8, mis_rounds=hier.mis_rounds,
+            peel_loop_syncs=hier.host_syncs, peel_iters=hier.peel_iters)
         return ISLabelIndex(
             n=n, k=hier.k, cfg=cfg, level=hier.level, lbl_ids=lbl_ids,
             lbl_d=lbl_d, lbl_pred=lbl_pred, up_ids=hier.up_ids, up_w=hier.up_w,

@@ -11,6 +11,16 @@ then per-row sort by (ancestor id, distance) + first-occurrence compact
 working set stays bounded (the chunk is the VMEM-resident tile of the
 BNL join).
 
+Sync model (docs/CONSTRUCTION.md): the chunk loop is sync-free. The
+per-chunk l_cap overflow flag used to be read back (`bool(overflow)`)
+after every chunk — one host stall per 4096 vertices; it now
+accumulates into a per-level device vector inside the donated chunk
+step, and the host checks it in one deferred read every
+``cfg.sync_every`` levels (and once after the loop). On overflow the
+build still raises with the offending level, exactly as the eager check
+did; labels-in-progress are discarded with the raise, so no corrupted
+state escapes.
+
 Label rows are kept sorted by ancestor id — queries rely on this for the
 merge-intersection.
 """
@@ -22,18 +32,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sync as hsync
 from repro.core.config import IndexConfig
 from repro.core.hierarchy import Hierarchy
 
 
-@partial(jax.jit, static_argnames=("l_cap",), donate_argnames=("lbl_ids", "lbl_d",
-                                                               "lbl_pred"))
-def label_chunk_step(lbl_ids, lbl_d, lbl_pred, up_ids, up_w, verts, l_cap: int):
+@partial(jax.jit, static_argnames=("l_cap",),
+         donate_argnames=("lbl_ids", "lbl_d", "lbl_pred", "ovf"))
+def label_chunk_step(lbl_ids, lbl_d, lbl_pred, ovf, up_ids, up_w, verts,
+                     lvl, l_cap: int):
     """Label one chunk of same-level vertices.
 
     lbl_*: [n+1, l_cap] global label arrays (row n = sentinel).
+    ovf:   int32[k+1] per-level overflow accumulator (device-resident;
+           slot ``lvl`` ORs in this chunk's l_cap overflow flag).
     up_*:  [n+1, d_cap] up-neighbor matrix.
     verts: int32[chunk] vertex ids of this level (padded with n).
+    lvl:   int32 traced level index (for the overflow accumulator).
     """
     n = lbl_ids.shape[0] - 1
     c = verts.shape[0]
@@ -68,6 +83,7 @@ def label_chunk_step(lbl_ids, lbl_d, lbl_pred, up_ids, up_w, verts, l_cap: int):
         [jnp.ones((c, 1), bool), ids[:, 1:] != ids[:, :-1]], 1) & (ids < n)
     posn = jnp.cumsum(is_first.astype(jnp.int32), axis=1) - 1
     overflow = jnp.any(is_first & (posn >= l_cap))
+    ovf = ovf.at[lvl].max(overflow.astype(jnp.int32))
 
     rows_ids = jnp.full((c, l_cap + 1), n, jnp.int32)
     rows_d = jnp.full((c, l_cap + 1), jnp.inf, jnp.float32)
@@ -85,13 +101,29 @@ def label_chunk_step(lbl_ids, lbl_d, lbl_pred, up_ids, up_w, verts, l_cap: int):
     lbl_ids = lbl_ids.at[verts].set(rows_ids)
     lbl_d = lbl_d.at[verts].set(rows_d)
     lbl_pred = lbl_pred.at[verts].set(rows_pred)
-    return lbl_ids, lbl_d, lbl_pred, overflow
+    return lbl_ids, lbl_d, lbl_pred, ovf
+
+
+def _check_overflow(ovf, cfg: IndexConfig):
+    """Deferred l_cap overflow check: one blocking read of the per-level
+    accumulator. Reports the *highest* flagged level — levels are labeled
+    k-1 → 1, so that is the first chunk that overflowed chronologically,
+    matching the retired eager per-chunk check."""
+    flags = hsync.host_read(ovf)
+    hit = np.flatnonzero(flags)
+    if len(hit):
+        raise RuntimeError(
+            f"label capacity overflow at level {int(hit.max())}: raise "
+            f"IndexConfig.l_cap (currently {cfg.l_cap})")
 
 
 def build_labels(hier: Hierarchy, cfg: IndexConfig):
-    """Run Algorithm 4 over the hierarchy. Returns device label arrays."""
+    """Run Algorithm 4 over the hierarchy. Returns device label arrays
+    ``(lbl_ids, lbl_d, lbl_pred)``; blocking syncs are limited to the
+    deferred overflow checks (⌈k / sync_every⌉ + 1 total)."""
     n, k = hier.n, hier.k
     l_cap, chunk = cfg.l_cap, cfg.label_chunk
+    sync_every = max(1, cfg.sync_every)
 
     lbl_ids = np.full((n + 1, l_cap), n, np.int32)
     lbl_d = np.full((n + 1, l_cap), np.inf, np.float32)
@@ -102,20 +134,22 @@ def build_labels(hier: Hierarchy, cfg: IndexConfig):
     lbl_ids = jnp.asarray(lbl_ids)
     lbl_d = jnp.asarray(lbl_d)
     lbl_pred = jnp.full((n + 1, l_cap), -1, jnp.int32)
+    ovf = jnp.zeros(k + 1, jnp.int32)
     up_ids = jnp.asarray(hier.up_ids)
     up_w = jnp.asarray(hier.up_w)
 
+    levels_done = 0
     for i in range(k - 1, 0, -1):
         verts = np.flatnonzero(hier.level == i)
         for lo in range(0, len(verts), chunk):
             part = verts[lo:lo + chunk]
             pad = np.full(chunk, n, np.int64)
             pad[:len(part)] = part
-            lbl_ids, lbl_d, lbl_pred, overflow = label_chunk_step(
-                lbl_ids, lbl_d, lbl_pred, up_ids, up_w,
-                jnp.asarray(pad, jnp.int32), l_cap)
-            if bool(overflow):
-                raise RuntimeError(
-                    f"label capacity overflow at level {i}: raise IndexConfig.l_cap "
-                    f"(currently {l_cap})")
+            lbl_ids, lbl_d, lbl_pred, ovf = label_chunk_step(
+                lbl_ids, lbl_d, lbl_pred, ovf, up_ids, up_w,
+                jnp.asarray(pad, jnp.int32), jnp.int32(i), l_cap)
+        levels_done += 1
+        if levels_done % sync_every == 0:
+            _check_overflow(ovf, cfg)
+    _check_overflow(ovf, cfg)
     return lbl_ids, lbl_d, lbl_pred

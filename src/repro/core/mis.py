@@ -8,6 +8,17 @@ neighbors. The degree bias preserves the paper's min-degree greedy
 spirit (small labels); random low bits break ties; vertex id breaks the
 rest, making the key a strict total order so every round makes progress.
 
+The key is the lexicographic pair ``(deg, perm)`` where ``perm`` is a
+random permutation of [0, n): unique per vertex, so the order is strict.
+It is compared as *two words* (a high-word segment-min on deg, then a
+low-word segment-min on perm restricted to neighbors achieving the deg
+minimum). Earlier revisions packed the pair into one uint32
+(``deg * n + perm``), which capped builds at ``(d_cap+2)*(n+1) < 2^32``
+— about 250M key states, hit long before the paper's million-vertex
+graphs at realistic ``d_cap``. The two-word compare has no width limit
+and is order-identical to the packed key wherever the packed key was
+valid, so fixed-seed hierarchies are bitwise-unchanged.
+
 Vertices with degree > d_cap are ineligible this level — under
 min-degree greedy they would be picked last anyway, and the cap is what
 bounds the augmenting-edge self-join (paper §4.1: the whole point of
@@ -22,18 +33,24 @@ import jax.numpy as jnp
 
 from repro.graphs import segment_ops as sops
 
-_INF_KEY = jnp.uint32(0xFFFFFFFF)
+_HI_INF = jnp.int32(2 ** 31 - 1)   # ineligible / empty-segment high word
+_LO_INF = jnp.int32(2 ** 31 - 1)
 
 
-def _priority_key(deg, perm, n, d_cap):
-    """uint32 key = deg * n + random-permutation rank.
+def mis_key_words(deg, perm, d_cap):
+    """The two-word priority key ``(hi, lo) = (min(deg, d_cap+1), perm)``.
 
-    ``perm`` is a permutation of [0, n), so keys of eligible vertices are
-    *unique* — a strict total order, hence every Luby round removes at
-    least one vertex and the loop terminates. Requires (d_cap+2)*n < 2^32
-    (checked by the caller)."""
-    d = jnp.minimum(deg, d_cap + 1).astype(jnp.uint32)
-    return d * jnp.uint32(n) + perm.astype(jnp.uint32)
+    Lexicographic order over the words reproduces the retired packed key
+    ``deg * n + perm`` exactly (``perm < n`` makes the low word a strict
+    tie-break), with no ``(d_cap+2)*(n+1) < 2^32`` width limit."""
+    hi = jnp.minimum(deg, d_cap + 1).astype(jnp.int32)
+    lo = perm.astype(jnp.int32)
+    return hi, lo
+
+
+def lex_less(a_hi, a_lo, b_hi, b_lo):
+    """Strict lexicographic (hi, lo) < (hi, lo) — elementwise."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
 
 
 @partial(jax.jit, static_argnames=("n",))
@@ -51,16 +68,22 @@ def independent_set(src, dst, valid, active, key_rng, n: int, d_cap: int):
     """
     deg = sops.count_per_segment(src, n + 1, mask=valid)[:n]
     perm = jax.random.permutation(key_rng, n)
-    key = _priority_key(deg, perm, n, d_cap)
+    key_hi, key_lo = mis_key_words(deg, perm, d_cap)
     eligible = active & (deg <= d_cap)
-    key = jnp.where(eligible, key, _INF_KEY)
+    key_hi = jnp.where(eligible, key_hi, _HI_INF)
+    key_lo = jnp.where(eligible, key_lo, _LO_INF)
 
     def body(state):
         pool, in_is, rounds = state
-        # min key over pool-neighbors, per vertex
-        contrib = jnp.where(pool[src] & valid, key[src], _INF_KEY)
-        nbr_min = sops.segment_min(contrib, dst, n + 1)[:n]
-        winners = pool & (key < nbr_min)
+        # two-word min key over pool-neighbors, per vertex: high-word
+        # segment-min, then low-word segment-min among edges achieving it
+        on = pool[src] & valid
+        c_hi = jnp.where(on, key_hi[src], _HI_INF)
+        nbr_hi = sops.segment_min(c_hi, dst, n + 1)
+        at_min = on & (c_hi == nbr_hi[dst])
+        c_lo = jnp.where(at_min, key_lo[src], _LO_INF)
+        nbr_lo = sops.segment_min(c_lo, dst, n + 1)
+        winners = pool & lex_less(key_hi, key_lo, nbr_hi[:n], nbr_lo[:n])
         # remove winners and their neighbors from the pool
         w_nbr = sops.segment_max(
             jnp.where(winners[src] & valid, 1, 0), dst, n + 1)[:n] > 0

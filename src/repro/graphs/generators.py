@@ -12,12 +12,29 @@ from __future__ import annotations
 import numpy as np
 
 
+def _pack_pairs(n, u, v):
+    """Self-loop-free canonical (lo < hi) pairs as *sorted unique* int64
+    keys ``lo * n + hi`` — one 1-D sort replaces the old row-wise
+    ``np.unique(..., axis=0)``; key order equals lexicographic (lo, hi)
+    order, so decoded pair sets are bitwise-unchanged."""
+    keep = u != v
+    lo = np.minimum(u[keep], v[keep]).astype(np.int64)
+    hi = np.maximum(u[keep], v[keep]).astype(np.int64)
+    return np.unique(lo * np.int64(n) + hi)
+
+
+def _unpack_keys(n, keys):
+    return np.stack([keys // n, keys % n], 1)
+
+
 def _finalize(n, und_edges, rng, max_w, weights=None):
-    """und_edges: (m,2) undirected unique pairs u<v."""
-    und_edges = np.unique(und_edges[und_edges[:, 0] != und_edges[:, 1]], axis=0)
-    u, v = und_edges[:, 0], und_edges[:, 1]
-    lo, hi = np.minimum(u, v), np.maximum(u, v)
-    pairs = np.unique(np.stack([lo, hi], 1), axis=0)
+    """und_edges: (m,2) possibly-duplicated undirected pairs, any order.
+
+    Canonicalizes to (lo < hi) *before* the dedup: the old order deduped
+    the raw (u, v) rows first, so reversed duplicates survived the first
+    pass and the full O(m log m) sort ran twice — on the critical path
+    of every 10^6-edge generator."""
+    pairs = _unpack_keys(n, _pack_pairs(n, und_edges[:, 0], und_edges[:, 1]))
     m = pairs.shape[0]
     if weights is None:
         weights = rng.integers(1, max_w + 1, size=m).astype(np.float32)
@@ -35,12 +52,8 @@ def er_graph(n: int, avg_deg: float = 3.0, max_w: int = 4, seed: int = 0):
     return _finalize(n, e, rng, max_w)
 
 
-def rmat_graph(n_pow: int, avg_deg: float = 8.0, max_w: int = 4, seed: int = 0,
-               a=0.57, b=0.19, c=0.19):
-    """R-MAT power-law graph (web/social regime). n = 2**n_pow."""
-    n = 1 << n_pow
-    rng = np.random.default_rng(seed)
-    m = int(n * avg_deg / 2)
+def _rmat_chunk(rng, m: int, n_pow: int, a, b, c):
+    """Sample m raw R-MAT (src, dst) pairs (recursive quadrant walk)."""
     src = np.zeros(m, np.int64)
     dst = np.zeros(m, np.int64)
     for _ in range(n_pow):
@@ -49,8 +62,30 @@ def rmat_graph(n_pow: int, avg_deg: float = 8.0, max_w: int = 4, seed: int = 0,
         dbit = ((q >= a) & (q < a + b) | (q >= a + b + c)).astype(np.int64)
         src = (src << 1) | sbit
         dst = (dst << 1) | dbit
-    e = np.stack([src, dst], 1)
-    return _finalize(n, e, rng, max_w)
+    return src, dst
+
+
+def rmat_graph(n_pow: int, avg_deg: float = 8.0, max_w: int = 4, seed: int = 0,
+               a=0.57, b=0.19, c=0.19, chunk_edges: int = 2_000_000):
+    """R-MAT power-law graph (web/social regime). n = 2**n_pow.
+
+    Raw pairs are sampled in ``chunk_edges``-sized chunks, each chunk
+    canonicalized + deduped on arrival, so peak host memory is one raw
+    chunk plus the surviving unique keys — the 10^6–10^7-vertex regime
+    never materializes all ``n_pow`` bit-planes of the full edge list at
+    once. Graphs with m <= chunk_edges are bitwise-identical to the
+    unchunked generator at the same seed (one chunk = one rng stream).
+    """
+    n = 1 << n_pow
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg / 2)
+    keys = []
+    for lo in range(0, m, chunk_edges):
+        src, dst = _rmat_chunk(rng, min(chunk_edges, m - lo), n_pow, a, b, c)
+        keys.append(_pack_pairs(n, src, dst))
+    pairs = _unpack_keys(n, np.unique(np.concatenate(keys))
+                         if len(keys) > 1 else keys[0])
+    return _finalize(n, pairs, rng, max_w)
 
 
 def grid_graph(side: int, max_w: int = 4, seed: int = 0):
@@ -61,6 +96,44 @@ def grid_graph(side: int, max_w: int = 4, seed: int = 0):
     h = np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], 1)
     v = np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], 1)
     return _finalize(n, np.concatenate([h, v]), rng, max_w)
+
+
+def pa_graph(n: int, m_per: int = 2, max_w: int = 4, seed: int = 0,
+             chunk: int = 500_000):
+    """Chunked preferential attachment (Barabási–Albert, scale-free
+    social regime) at 10^6–10^7 vertices.
+
+    The serial BA chain (each vertex attaches to endpoints of the graph
+    built so far, proportional to degree) is vectorized per chunk: all
+    vertices of a chunk sample their ``m_per`` targets uniformly from
+    the *endpoint pool* (every edge contributes both endpoints, so pool
+    frequency == degree) as it stood before the chunk — the standard
+    copy-model approximation. Chunks ramp geometrically (a chunk never
+    more than doubles the vertex count, capped at ``chunk``) so the
+    no-feedback window stays a constant fraction of the graph,
+    preserving the power-law tail while keeping generation O(m)
+    vectorized numpy.
+    """
+    rng = np.random.default_rng(seed)
+    s0 = m_per + 1
+    if n <= s0:
+        raise ValueError(f"n must exceed m_per + 1 = {s0}")
+    # seed clique: every early vertex reachable, pool seeded with degree
+    ii, jj = np.triu_indices(s0, k=1)
+    edges = [np.stack([ii.astype(np.int64), jj.astype(np.int64)], 1)]
+    pool = [np.concatenate([ii, jj]).astype(np.int32)]
+    lo = s0
+    while lo < n:
+        hi = min(lo + min(chunk, max(64, lo)), n)
+        flat_pool = np.concatenate(pool) if len(pool) > 1 else pool[0]
+        pool = [flat_pool]
+        new = np.repeat(np.arange(lo, hi, dtype=np.int64), m_per)
+        tgt = flat_pool[rng.integers(0, len(flat_pool), size=len(new))]
+        edges.append(np.stack([new, tgt.astype(np.int64)], 1))
+        pool.append(np.concatenate([new.astype(np.int32),
+                                    tgt.astype(np.int32)]))
+        lo = hi
+    return _finalize(n, np.concatenate(edges), rng, max_w)
 
 
 def caveman_graph(n_communities: int, size: int, p_rewire: float = 0.05,

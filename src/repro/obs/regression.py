@@ -74,11 +74,13 @@ class Regression:
 
 # Derived row keys matching these fragments are deterministic behavior
 # metrics (same code + preset => same value): exactness/parity flags and
-# fill ratios must not drop; round counts and overflow counts must not
-# grow. Everything else in a row stays timing-or-ignored.
+# fill ratios must not drop; round counts, overflow counts, and host-sync
+# counts (the construction suite's syncs_per_level — the device-resident
+# build promises <= 1) must not grow. Everything else in a row stays
+# timing-or-ignored.
 BEHAVIOR_KEY_FRAGMENTS = (
     ("exact", True), ("parity", True), ("bitwise", True), ("fill", True),
-    ("hit", True), ("rounds", False), ("overflow", False),
+    ("hit", True), ("rounds", False), ("overflow", False), ("sync", False),
 )
 
 

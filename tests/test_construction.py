@@ -1,0 +1,198 @@
+"""Construction-path coverage (docs/CONSTRUCTION.md): capacity-overflow
+semantics, the two-word MIS key, and dual-builder determinism.
+
+The overflow contract is load-bearing for the deferred-sync design: the
+device builder batches its capacity checks into the per-level stats read
+(and the labeler into one read per ``sync_every`` levels), but a tripped
+cap must still raise an actionable RuntimeError naming the offending
+level — and must never let a truncated index escape (the raise discards
+the build; a rebuild with a bigger cap is bitwise-clean).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import ISLabelIndex, IndexConfig, build_hierarchy
+from repro.core.hierarchy import (build_hierarchy_device,
+                                  build_hierarchy_host)
+from repro.core.labeling import build_labels
+from repro.core.mis import independent_set, lex_less, mis_key_words
+from repro.graphs import generators as gen
+
+
+# ---------------------------------------------------------------- overflow
+
+def test_e_cap_overflow_raises_actionable():
+    """Densifying peel blows the edge buffer (augmentation outpaces the
+    removals on a deg-6 ER graph): the deferred stats read still raises,
+    naming the level and the knob to turn."""
+    n, src, dst, w = gen.er_graph(300, 6.0, seed=3)
+    with pytest.raises(RuntimeError,
+                       match=r"edge capacity overflow at level \d+.*"
+                             r"e_cap_factor"):
+        build_hierarchy(n, src, dst, w,
+                        IndexConfig(e_cap_factor=1.2, aug_cap_factor=8.0,
+                                    d_cap=16))
+
+
+def test_aug_cap_overflow_raises_actionable():
+    n, src, dst, w = gen.er_graph(300, 6.0, seed=3)
+    with pytest.raises(RuntimeError,
+                       match=r"augmentation buffer overflow at level \d+"
+                             r".*aug_cap_factor"):
+        build_hierarchy(n, src, dst, w,
+                        IndexConfig(e_cap_factor=8.0, aug_cap_factor=0.2,
+                                    d_cap=16))
+
+
+def test_l_cap_overflow_raises_actionable():
+    """The labeler's check is deferred sync_every levels — it must still
+    raise, and name l_cap."""
+    n, src, dst, w = gen.caveman_graph(6, 10, seed=7)
+    cfg = IndexConfig(l_cap=2, label_chunk=32, e_cap_factor=8.0,
+                      aug_cap_factor=4.0, sync_every=64)
+    h = build_hierarchy(n, src, dst, w, cfg)
+    with pytest.raises(RuntimeError,
+                       match=r"label capacity overflow at level \d+.*"
+                             r"l_cap \(currently 2\)"):
+        build_labels(h, cfg)
+
+
+def test_overflow_leaves_no_corrupted_state():
+    """A tripped cap discards the build; retrying with an adequate cap
+    yields an index bitwise-identical to one never preceded by the
+    failure (no donated-buffer or cache pollution)."""
+    n, src, dst, w = gen.caveman_graph(6, 10, seed=7)
+    good = IndexConfig(l_cap=256, label_chunk=32, e_cap_factor=8.0,
+                       aug_cap_factor=4.0, d_cap=32)
+    ref_idx = ISLabelIndex.build(n, src, dst, w, good)
+    with pytest.raises(RuntimeError):
+        ISLabelIndex.build(n, src, dst, w,
+                           IndexConfig(l_cap=2, label_chunk=32,
+                                       e_cap_factor=8.0, aug_cap_factor=4.0,
+                                       d_cap=32))
+    retry = ISLabelIndex.build(n, src, dst, w, good)
+    assert retry.k == ref_idx.k
+    np.testing.assert_array_equal(retry.level, ref_idx.level)
+    np.testing.assert_array_equal(np.asarray(retry.lbl_ids),
+                                  np.asarray(ref_idx.lbl_ids))
+    np.testing.assert_array_equal(np.asarray(retry.lbl_d),
+                                  np.asarray(ref_idx.lbl_d))
+    np.testing.assert_array_equal(retry.core_src, ref_idx.core_src)
+
+
+def test_unknown_builder_rejected():
+    n, src, dst, w = gen.er_graph(64, 2.0, seed=0)
+    with pytest.raises(ValueError, match="builder"):
+        build_hierarchy(n, src, dst, w, IndexConfig(builder="gpu"))
+
+
+# ------------------------------------------------------------ two-word key
+
+def test_lex_less_matches_packed_key_order():
+    """The (deg, perm) two-word compare must order exactly like the
+    retired packed key deg*n + perm computed in unbounded python ints —
+    including above the old (d_cap+2)*(n+1) < 2^32 ceiling."""
+    rng = np.random.default_rng(0)
+    n = 2 ** 31 - 2            # far beyond any packable width
+    d_cap = 16
+    deg = np.concatenate([rng.integers(0, d_cap + 2, 500),
+                          [0, 0, d_cap + 1, d_cap + 1]]).astype(np.int32)
+    perm = np.concatenate([rng.integers(0, n, 500),
+                           [0, n - 1, 0, n - 1]]).astype(np.int64)
+    hi, lo = mis_key_words(jax.numpy.asarray(deg), jax.numpy.asarray(perm),
+                           d_cap)
+    hi = np.asarray(hi).astype(np.int64)
+    lo = np.asarray(lo).astype(np.int64)
+    packed = deg.astype(object) * (n + 1) + perm.astype(object)
+    a = rng.integers(0, len(deg), 4000)
+    b = rng.integers(0, len(deg), 4000)
+    got = np.asarray(lex_less(hi[a], lo[a], hi[b], lo[b]))
+    want = packed[a] < packed[b]
+    np.testing.assert_array_equal(got, want.astype(bool))
+
+
+def _reference_is(n, src, dst, deg, perm, eligible):
+    """Serial greedy over ascending (deg, perm): the fixed point the
+    parallel rounds must reproduce (strict total order => unique MIS)."""
+    order = sorted(range(n), key=lambda v: (deg[v], perm[v]))
+    adj = {}
+    for s, d in zip(src, dst):
+        if s < n and d < n:
+            adj.setdefault(int(d), set()).add(int(s))
+    chosen, blocked = set(), set()
+    for v in order:
+        if eligible[v] and v not in blocked:
+            chosen.add(v)
+            blocked |= adj.get(v, set())
+            blocked.add(v)
+    return chosen
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_independent_set_matches_serial_greedy(seed):
+    """Luby rounds with the two-word key land on the same IS as the
+    serial min-(deg, perm) greedy: maximal, independent, identical."""
+    n, src, dst, w = gen.er_graph(120, 3.0, seed=seed)
+    d_cap = 8
+    valid = src < n
+    deg = np.bincount(src[valid], minlength=n)
+    rng = jax.random.PRNGKey(seed)
+    in_is, rounds = independent_set(
+        jax.numpy.asarray(src), jax.numpy.asarray(dst),
+        jax.numpy.asarray(valid), jax.numpy.ones(n, bool), rng, n, d_cap)
+    in_is = np.asarray(in_is)
+    perm = np.asarray(jax.random.permutation(rng, n))
+    eligible = deg <= d_cap
+    want = _reference_is(n, src, dst, deg, perm, eligible)
+    assert set(np.flatnonzero(in_is).tolist()) == want
+    assert int(rounds) >= 1
+
+
+# ----------------------------------------------------------- determinism
+
+GRAPHS = [("er", lambda: gen.er_graph(500, 3.0, seed=1)),
+          ("rmat", lambda: gen.rmat_graph(9, 8.0, seed=2)),
+          ("grid", lambda: gen.grid_graph(20, seed=3))]
+
+
+def _hier_fields(h):
+    return (h.k, h.level, h.up_ids, h.up_w, h.up_via, h.core_src,
+            h.core_dst, h.core_w, h.core_via, np.asarray(h.level_sizes),
+            np.asarray(h.graph_sizes), np.asarray(h.mis_rounds))
+
+
+@pytest.mark.parametrize("name,mk", GRAPHS)
+def test_device_and_host_builders_bitwise_equal(name, mk):
+    n, src, dst, w = mk()
+    cfg = IndexConfig(l_cap=256, label_chunk=128)
+    hd = build_hierarchy_device(n, src, dst, w, cfg)
+    hh = build_hierarchy_host(n, src, dst, w, cfg)
+    for a, b in zip(_hier_fields(hd), _hier_fields(hh)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ld = build_labels(hd, cfg)
+    lh = build_labels(hh, cfg)
+    for a, b in zip(ld, lh):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_device_builder_sync_budget():
+    """<= 1 blocking host read per level-loop iteration."""
+    n, src, dst, w = gen.er_graph(500, 3.0, seed=1)
+    h = build_hierarchy_device(n, src, dst, w, IndexConfig())
+    assert h.peel_iters >= 1
+    assert h.host_syncs <= h.peel_iters
+
+
+def test_fixed_seed_build_is_deterministic():
+    """Same seed, same graph => bitwise-identical index across repeated
+    builds in one process (jit cache warm vs cold)."""
+    n, src, dst, w = gen.er_graph(300, 3.0, seed=5)
+    cfg = IndexConfig(l_cap=256, label_chunk=64)
+    a = ISLabelIndex.build(n, src, dst, w, cfg)
+    b = ISLabelIndex.build(n, src, dst, w, cfg)
+    np.testing.assert_array_equal(a.level, b.level)
+    np.testing.assert_array_equal(np.asarray(a.lbl_ids),
+                                  np.asarray(b.lbl_ids))
+    np.testing.assert_array_equal(np.asarray(a.lbl_d), np.asarray(b.lbl_d))
